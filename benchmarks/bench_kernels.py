@@ -1,0 +1,58 @@
+"""Kernel micro-benchmarks (interpret-mode wall time is NOT TPU perf — the
+derived column reports the analytic FLOPs/bytes each call would execute on
+TPU, which is what the BlockSpec tiling targets)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_flash_attention():
+    from repro.kernels.ops import flash_attention
+
+    B, S, H, Hkv, Dh = 1, 256, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, Dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, Dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, Dh), jnp.float32)
+    us = _time(lambda *a: flash_attention(*a), q, k, v, iters=2)
+    flops = 4 * B * H * S * (S / 2) * Dh
+    return [("kernel_flash_attention_256", us, f"tpu_flops={flops:.3g}")]
+
+
+def bench_rwkv6_scan():
+    from repro.kernels.ops import rwkv6_scan
+
+    B, T, H, D = 1, 128, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, D)) for i in range(3))
+    w = 0.5 + 0.49 * jax.random.uniform(ks[3], (B, T, H, D))
+    u = jax.random.normal(ks[4], (H, D)) * 0.1
+    us = _time(lambda *a: rwkv6_scan(*a), r, k, v, w, u, iters=2)
+    chunk = 32
+    flops = B * H * (T / chunk) * (2 * chunk * D * D * 3 + 2 * chunk * chunk * D * 2)
+    return [("kernel_rwkv6_scan_128", us, f"tpu_flops={flops:.3g}")]
+
+
+def bench_weighted_accum():
+    from repro.kernels.ops import weighted_accum
+
+    n = 1 << 20
+    a = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    g = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    us = _time(lambda *x: weighted_accum(*x, 0.5), a, g, iters=2)
+    return [("kernel_weighted_accum_1M", us, f"hbm_bytes={3*4*n} (fused: 1r+1r+1w)")]
+
+
+ALL = [bench_flash_attention, bench_rwkv6_scan, bench_weighted_accum]

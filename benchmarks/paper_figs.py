@@ -1,0 +1,230 @@
+"""Benchmarks reproducing each paper table/figure (CSV rows out).
+
+Figure map:
+  fig6  -> bench_convergence      static ratios don't change convergence
+  fig7  -> bench_ratio_speed_1m   epoch time vs ratio, 1 machine (1080ti+2080ti)
+  fig8  -> bench_ratio_speed_2m   epoch time vs ratio, 2 machines (V100+2080ti)
+  fig9  -> bench_adaptive_2w      adaptive trajectory, 2 workers
+  fig10 -> bench_adaptive_3w      adaptive trajectory, 3 workers
+  fig11 -> bench_hetero_cluster   add / replace a worker
+  fig12 -> bench_adpsgd_2w        2-worker AD-PSGD degenerates; allocation wins
+  fig13 -> bench_speedup          speedups vs PS / AllReduce with 2x & 5x stragglers
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    AdaptiveAllocationController,
+    ClusterSpec,
+    CommModel,
+    ControllerConfig,
+    WorkerSpeed,
+    simulate_adpsgd,
+    simulate_ps,
+    simulate_sync,
+    speedup,
+)
+from repro.data import SyntheticImages
+from repro.models.convnet import convnet_forward, init_convnet, xent_loss
+from repro.optim import SGDConfig, sgd_init, sgd_update
+
+Row = tuple  # (name, value, derived)
+
+
+# ---------------------------------------------------------------------------
+# fig 6 — convergence is ratio-independent (real training, paper's ConvNet)
+# ---------------------------------------------------------------------------
+
+
+def bench_convergence() -> list[Row]:
+    """Train ConvNet on synthetic MNIST under 4 allocations of the SAME global
+    batch; final losses must coincide (paper fig. 6)."""
+    rows = []
+    data = SyntheticImages(shape=(28, 28, 1), n_samples=512, seed=0)
+    ratios = {"5:5": (5, 5), "6:4": (6, 4), "3:7": (3, 7), "7:3": (7, 3)}
+    finals = {}
+    for name, ratio in ratios.items():
+        key = jax.random.PRNGKey(0)  # same init for every ratio
+        params = init_convnet(key, width=8)
+        opt = sgd_init(params)
+        scfg = SGDConfig(momentum=0.9, weight_decay=1e-4)
+        C, mb = sum(ratio), 10
+        steps = 30
+        t0 = time.perf_counter()
+        for step in range(steps):
+            idx = np.arange(step * C * mb, (step + 1) * C * mb) % len(data)
+            batch = data.batch(idx)
+            # allocation changes WHO computes, not WHAT: grads averaged over
+            # the same C*mb samples -> identical update (paper eq. 1)
+            x = jnp.asarray(batch["images"])
+            y = jnp.asarray(batch["labels"])
+            g = jax.grad(lambda p: xent_loss(convnet_forward(p, x), y))(params)
+            params, opt = sgd_update(g, opt, params, 0.01, scfg)
+        loss = float(xent_loss(convnet_forward(params, x), y))
+        us = (time.perf_counter() - t0) / steps * 1e6
+        finals[name] = loss
+        rows.append((f"fig6_convergence_ratio_{name}", us, f"final_loss={loss:.4f}"))
+    spread = max(finals.values()) - min(finals.values())
+    rows.append(("fig6_convergence_spread", 0.0, f"max_final_loss_spread={spread:.5f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# figs 7/8 — epoch time vs static ratio
+# ---------------------------------------------------------------------------
+
+
+def _ratio_speed(cluster: ClusterSpec, groups, total, tag) -> list[Row]:
+    comm = CommModel(grad_bytes=50e6)
+    rows = []
+    best = None
+    for name, ratio in groups.items():
+        t0 = time.perf_counter()
+        log = simulate_sync(
+            cluster, epochs=3, total_micro=total, comm=comm, policy="static",
+            static_ratios=ratio, jitter=False,
+        )
+        us = (time.perf_counter() - t0) * 1e6 / 3
+        epoch_s = float(log.makespans.mean())
+        rows.append((f"{tag}_ratio_{name}", us, f"epoch_s={epoch_s:.4f}"))
+        if best is None or epoch_s < best[1]:
+            best = (name, epoch_s)
+    rows.append((f"{tag}_best", 0.0, f"best_ratio={best[0]}"))
+    return rows
+
+
+def bench_ratio_speed_1m() -> list[Row]:
+    """fig 7: one machine, GTX1080ti + RTX2080ti, ratios 5:5 6:4 3:7 7:3."""
+    cluster = ClusterSpec.from_gpus(["rtx2080ti", "gtx1080ti"], jitter=0.0)
+    groups = {"5:5": (5, 5), "6:4": (6, 4), "3:7": (3, 7), "7:3": (7, 3)}
+    return _ratio_speed(cluster, groups, 10, "fig7")
+
+
+def bench_ratio_speed_2m() -> list[Row]:
+    """fig 8: two machines, V100 + RTX2080ti, ratios 10:10 12:8 2:18 15:5."""
+    cluster = ClusterSpec.from_gpus(["v100", "rtx2080ti"], jitter=0.0)
+    groups = {"10:10": (10, 10), "12:8": (12, 8), "2:18": (2, 18), "15:5": (15, 5)}
+    return _ratio_speed(cluster, groups, 20, "fig8")
+
+
+# ---------------------------------------------------------------------------
+# figs 9/10 — adaptive trajectory
+# ---------------------------------------------------------------------------
+
+
+def _adaptive(cluster, total, tag, epochs=10) -> list[Row]:
+    t0 = time.perf_counter()
+    log = simulate_sync(cluster, epochs=epochs, total_micro=total, policy="adaptive")
+    us = (time.perf_counter() - t0) * 1e6 / epochs
+    m = log.makespans
+    allocs = log.allocations
+    stable_epoch = next(
+        (e for e in range(1, epochs) if np.all(np.abs(np.diff(allocs[e - 1 : e + 1], axis=0)) <= 1)),
+        epochs,
+    )
+    gain = 1.0 - m[-1] / m[0]
+    return [
+        (f"{tag}_epoch0_s", us, f"makespan={m[0]:.4f}"),
+        (f"{tag}_final_s", us, f"makespan={m[-1]:.4f}"),
+        (f"{tag}_gain", 0.0, f"epoch_time_reduction={gain:.3f}"),
+        (f"{tag}_stable_epoch", 0.0, f"ratio_stable_at_epoch={stable_epoch}"),
+        (f"{tag}_final_alloc", 0.0, "w=" + ":".join(map(str, allocs[-1]))),
+    ]
+
+
+def bench_adaptive_2w() -> list[Row]:
+    """fig 9: V100 + RTX2080ti, two initial ratios converge to the same point."""
+    rows = []
+    cluster = ClusterSpec.from_gpus(["v100", "rtx2080ti"], jitter=0.02)
+    rows += _adaptive(cluster, 20, "fig9_init_equal")
+    ctl = AdaptiveAllocationController(
+        ControllerConfig(total=20, n_workers=2), initial_allocation=[5, 15]
+    )
+    log = simulate_sync(cluster, 10, 20, policy="adaptive", controller=ctl)
+    rows.append(
+        ("fig9_init_skewed_final_alloc", 0.0, "w=" + ":".join(map(str, log.allocations[-1])))
+    )
+    return rows
+
+
+def bench_adaptive_3w() -> list[Row]:
+    """fig 10: V100 + 2x RTX2080ti."""
+    cluster = ClusterSpec.from_gpus(["v100", "rtx2080ti", "rtx2080ti"], jitter=0.02)
+    return _adaptive(cluster, 30, "fig10")
+
+
+# ---------------------------------------------------------------------------
+# fig 11 — add / replace a worker
+# ---------------------------------------------------------------------------
+
+
+def bench_hetero_cluster() -> list[Row]:
+    comm = CommModel(grad_bytes=50e6)
+    base = ClusterSpec.from_gpus(["v100", "rtx2080ti"], jitter=0.0)
+    plus = base.with_added(WorkerSpeed(name="rtx2080ti:2", throughput=14.5))
+    two2080 = ClusterSpec.from_gpus(["rtx2080ti", "rtx2080ti"], jitter=0.0)
+    rows = []
+    for tag, cluster in [("v100+2080ti", base), ("v100+2x2080ti", plus), ("2x2080ti", two2080)]:
+        log = simulate_sync(cluster, epochs=10, total_micro=24, comm=comm, policy="adaptive")
+        rows.append((f"fig11_{tag}", 0.0, f"steady_epoch_s={log.makespans[-1]:.4f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# figs 12/13 — cross-system comparison
+# ---------------------------------------------------------------------------
+
+
+def bench_adpsgd_2w() -> list[Row]:
+    """fig 12: with 2 workers AD-PSGD's pairwise averaging couples both
+    workers; the allocation algorithm still exploits the speed gap."""
+    cluster = ClusterSpec.from_gpus(["rtx2080ti", "gtx1080ti"], jitter=0.0)
+    comm = CommModel(grad_bytes=50e6)
+    C, epochs = 20, 10
+    target = C * epochs
+    ad = simulate_adpsgd(cluster, target_samples=target, comm=comm)
+    adapt = simulate_sync(cluster, epochs, C, comm, policy="adaptive").total_time()
+    equal = simulate_sync(cluster, epochs, C, comm, policy="equal").total_time()
+    return [
+        ("fig12_adpsgd_s", 0.0, f"wall={ad['wall_clock_s']:.3f}"),
+        ("fig12_allreduce_equal_s", 0.0, f"wall={equal:.3f}"),
+        ("fig12_allocation_s", 0.0, f"wall={adapt:.3f}"),
+        ("fig12_allocation_vs_adpsgd", 0.0, f"speedup={speedup(ad['wall_clock_s'], adapt):.2f}x"),
+    ]
+
+
+def bench_speedup() -> list[Row]:
+    """fig 13: speedup of the allocation algorithm vs PS and equal AllReduce
+    with a 2x and a 5x straggler (paper: ~5.36x vs PS @2x, 2.75x @5x)."""
+    rows = []
+    comm = CommModel(grad_bytes=100e6)
+    C, epochs = 40, 12
+    for factor, tag in [(2.0, "2x"), (5.0, "5x")]:
+        workers = [WorkerSpeed(f"w{i}", 10.0) for i in range(3)] + [
+            WorkerSpeed("straggler", 10.0 / factor)
+        ]
+        cluster = ClusterSpec(workers=workers)
+        adapt = simulate_sync(cluster, epochs, C, comm, policy="adaptive").total_time()
+        equal = simulate_sync(cluster, epochs, C, comm, policy="equal").total_time()
+        ps = simulate_ps(cluster, epochs, C, comm).total_time()
+        rows.append((f"fig13_vs_ps_{tag}", 0.0, f"speedup={speedup(ps, adapt):.2f}x"))
+        rows.append((f"fig13_vs_allreduce_{tag}", 0.0, f"speedup={speedup(equal, adapt):.2f}x"))
+    return rows
+
+
+ALL = [
+    bench_convergence,
+    bench_ratio_speed_1m,
+    bench_ratio_speed_2m,
+    bench_adaptive_2w,
+    bench_adaptive_3w,
+    bench_hetero_cluster,
+    bench_adpsgd_2w,
+    bench_speedup,
+]

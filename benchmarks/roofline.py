@@ -1,0 +1,373 @@
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline analysis per (arch x shape) on the single-pod production mesh.
+
+Methodology (documented in EXPERIMENTS.md §Roofline):
+
+* XLA's cost_analysis counts loop bodies ONCE (verified: scan/while FLOPs are
+  trip-count-blind), so whole-step numbers are useless for roofline.  Instead
+  we lower unrolled COMPONENT variants of each model on the production mesh:
+
+    v1 = 1 pattern-superblock, layers unrolled, naive attention (no inner
+         loops -> every FLOP visible), production shardings
+    v2 = 2 superblocks, same
+
+  per-superblock = v2 - v1; whole model = v1 + (n_repeats-1 + tail/pattern) x
+  per-superblock; train multiplies by the accumulation trip count.  Naive and
+  deployed blocked attention execute the same matmul FLOPs (both compute all
+  (q,kv) blocks and mask), so the FLOP count reflects the deployed baseline —
+  including remat recompute, which is visible in the unrolled HLO.
+
+* collective term uses the same component extrapolation with the DEPLOYED
+  attention impl, summing collective-op result bytes from the per-device HLO.
+
+* memory (HBM traffic) term is a documented analytic model (HLO 'bytes
+  accessed' is also loop-blind): per-chip param reads/writes + activation
+  traffic + KV-cache traffic; see `analytic_bytes`.
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import SHAPES, get_config, list_archs, skip_reason, train_accum  # noqa: E402
+from repro.launch.mesh import HW, make_production_mesh  # noqa: E402
+from repro.launch.dryrun import collective_stats  # noqa: E402
+
+CHIPS = 256  # single-pod roofline
+
+
+# ---------------------------------------------------------------------------
+# analytic MODEL_FLOPS (the 6·N·D yardstick)
+# ---------------------------------------------------------------------------
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·tokens (train) / 2·N_active·tokens (inference) + attention.
+
+    Attention term per token per attn layer: 4·S_eff·H·Dh MACs->FLOPs
+    (QK^T + PV), x3 for training (fwd + bwd). S_eff: causal S/2, window W,
+    decode = cache length.
+    """
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        base = 6.0 * n_active * tokens
+        attn_mult = 3.0
+        s_eff_full = shape.seq_len / 2
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        base = 2.0 * n_active * tokens
+        attn_mult = 1.0
+        s_eff_full = shape.seq_len / 2
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        base = 2.0 * n_active * tokens
+        attn_mult = 1.0
+        s_eff_full = shape.seq_len
+
+    attn = 0.0
+    for spec in cfg.layer_specs():
+        if spec.kind != "attn":
+            continue
+        s_eff = min(cfg.sliding_window, s_eff_full) if spec.attn_type == "local" else s_eff_full
+        attn += attn_mult * 4.0 * s_eff * cfg.n_heads * cfg.head_dim * tokens
+    return base + attn
+
+
+# ---------------------------------------------------------------------------
+# analytic HBM-traffic model
+# ---------------------------------------------------------------------------
+
+
+def analytic_bytes(cfg, shape, accum: int) -> float:
+    """Per-chip HBM bytes per step (documented model, not HLO-derived).
+
+    train:  accum x (2 reads + 1 grad write of the device's param shard)
+            + optimizer update (read p,m,v + write p,m,v)
+            + activations: tokens/chip x d x L x ~20B (bf16 io + remat reread)
+            + logits 3x toks/chip x V/tp x 2B
+    prefill: 1 param read + activations 8B/coefficient + kv write
+    decode:  param read (MoE: only routed experts) + full cache read + write
+    """
+    p_bytes = cfg.param_count()["total"] * jnp.dtype(cfg.param_dtype).itemsize
+    p_shard = p_bytes / CHIPS
+    d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab_size
+    tp = 16
+    if shape.kind == "train":
+        toks_chip = shape.global_batch * shape.seq_len / CHIPS
+        act = toks_chip * d * L * 20.0  # step total across all microbatches
+        logits = 3.0 * toks_chip * (V / tp) * 2.0
+        opt = 6.0 * p_shard  # read p,m,v + write p,m,v
+        return accum * 3.0 * p_shard + act + logits + opt
+    if shape.kind == "prefill":
+        toks_chip = shape.global_batch * shape.seq_len / CHIPS
+        return p_shard + toks_chip * d * L * 8.0
+    # decode
+    cache_bytes = _cache_bytes(cfg, shape) / CHIPS
+    expert_frac = 1.0
+    if cfg.moe is not None:
+        expert_frac = min(1.0, shape.global_batch * cfg.moe.top_k / cfg.moe.n_experts)
+        dense_frac = 1.0 - _moe_param_frac(cfg)
+        expert_frac = dense_frac + _moe_param_frac(cfg) * expert_frac
+    return p_shard * expert_frac + cache_bytes
+
+
+def _moe_param_frac(cfg) -> float:
+    pc = cfg.param_count()
+    if cfg.moe is None:
+        return 0.0
+    inactive_plus_active = pc["total"] - (pc["total"] - cfg.active_param_count())
+    expert_total = (pc["total"] - cfg.active_param_count()) / max(
+        1 - cfg.moe.top_k / cfg.moe.n_experts, 1e-9
+    )
+    return min(expert_total / pc["total"], 1.0)
+
+
+def _cache_bytes(cfg, shape) -> float:
+    B, S = shape.global_batch, shape.seq_len
+    total = 0.0
+    for spec in cfg.layer_specs():
+        if spec.kind == "attn":
+            s_vis = S  # baseline caches full length even for local layers
+            total += 2 * B * s_vis * cfg.n_kv_heads * cfg.head_dim * 2
+        elif spec.kind == "mamba":
+            m = cfg.mamba
+            total += B * m.d_inner * (m.d_state * 4 + (m.d_conv - 1) * 2)
+        elif spec.kind == "rwkv":
+            r = cfg.rwkv
+            total += B * (cfg.d_model // r.head_dim) * r.head_dim**2 * 4
+    return total
+
+
+# ---------------------------------------------------------------------------
+# component HLO lowering
+# ---------------------------------------------------------------------------
+
+
+def _variant(cfg, k: int):
+    """k-superblock unrolled variant of the arch config."""
+    pat = len(cfg.block_pattern)
+    return dataclasses.replace(cfg, name=f"{cfg.name}-v{k}", n_layers=pat * k)
+
+
+def _lower_component(cfg, shape, mesh, attn_impl: str, kind: str):
+    """Lower one unrolled variant; return (flops, coll_bytes) per device."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.dist.sharding import cache_specs, param_specs
+    from repro.models import transformer
+
+    from repro.launch.specs import FSDP_THRESHOLD
+
+    params_shape = jax.eval_shape(lambda key: transformer.init_params(cfg, key), jax.random.PRNGKey(0))
+    # match the deployed sharding policy: FSDP only above the threshold
+    fsdp = get_config(_base_arch(cfg)).param_count()["total"] > FSDP_THRESHOLD
+    pshard = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_specs(params_shape, mesh, fsdp=fsdp)
+    )
+    act = {
+        "h": NamedSharding(mesh, P("data", None, None)),
+        "logits": NamedSharding(mesh, P("data", None, "model")),
+    }
+
+    if kind == "train":
+        accum = train_accum(_base_arch(cfg))
+        micro_bs = max(shape.global_batch // 16 // accum, 1) * 16  # global micro rows
+
+        def fn(p, x, y):
+            logits, mets = transformer.forward(p, x, cfg, attn_impl=attn_impl, shardings=act, unroll=True)
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            ll = jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+            return -ll.sum() + mets["moe_aux"]
+
+        gf = jax.grad(fn)
+        toks = jax.ShapeDtypeStruct((micro_bs, shape.seq_len), jnp.int32)
+        tsh = NamedSharding(mesh, P("data", None))
+        lowered = jax.jit(gf, in_shardings=(pshard, tsh, tsh), out_shardings=pshard).lower(
+            params_shape, toks, toks
+        )
+    elif kind == "prefill":
+        B = shape.global_batch
+        if cfg.embeds_input:
+            toks = jax.ShapeDtypeStruct((B, shape.seq_len, cfg.d_model), jnp.bfloat16)
+            tsh = NamedSharding(mesh, P("data", None, None))
+        else:
+            toks = jax.ShapeDtypeStruct((B, shape.seq_len), jnp.int32)
+            tsh = NamedSharding(mesh, P("data", None))
+
+        def fn(p, x):
+            logits, _ = transformer.forward(p, x, cfg, attn_impl=attn_impl, shardings=act, unroll=True)
+            return logits[:, -1]
+
+        lowered = jax.jit(
+            fn, in_shardings=(pshard, tsh), out_shardings=NamedSharding(mesh, P("data", "model"))
+        ).lower(params_shape, toks)
+    else:  # decode
+        from repro.models import transformer as T
+
+        B = shape.global_batch
+        cache_shape = jax.eval_shape(lambda: T.init_cache(cfg, B, shape.seq_len))
+        cshard = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), cache_specs(cache_shape, mesh, dp_axes=("data",))
+        )
+        b_ax = "data" if B % 16 == 0 else None
+        if cfg.embeds_input:
+            toks = jax.ShapeDtypeStruct((B, cfg.d_model), jnp.bfloat16)
+            tsh = NamedSharding(mesh, P(b_ax, None))
+        else:
+            toks = jax.ShapeDtypeStruct((B,), jnp.int32)
+            tsh = NamedSharding(mesh, P(b_ax))
+        dact = {"h": NamedSharding(mesh, P(b_ax, None, None)), "logits": NamedSharding(mesh, P(b_ax, "model"))}
+
+        def fn(p, c, t):
+            return T.decode_step(p, c, t, cfg, shardings=dact, unroll=True)
+
+        lowered = jax.jit(
+            fn,
+            in_shardings=(pshard, cshard, tsh),
+            out_shardings=(NamedSharding(mesh, P(b_ax, "model")), cshard),
+            donate_argnums=(1,),
+        ).lower(params_shape, cache_shape, toks)
+
+    compiled = lowered.compile()
+    flops = float(compiled.cost_analysis().get("flops", 0.0))
+    colls = collective_stats(compiled.as_text())
+    coll_bytes = sum(s["bytes"] for s in colls.values())
+    return flops, coll_bytes
+
+
+def _base_arch(cfg) -> str:
+    return cfg.name.split("-v")[0]
+
+
+def _deploy_collectives(arch: str, shape_name: str, mesh) -> float:
+    """Per-step per-device collective bytes from the DEPLOY lowering (the same
+    step the dry-run compiles), with loop bodies weighted by trip counts:
+    trips = [accumulation W, layer-scan repeats] for train, [repeats] for
+    serving."""
+    from repro.launch.dryrun import loop_aware_collective_bytes
+    from repro.launch.specs import plan_cell
+
+    plan = plan_cell(arch, shape_name, mesh)
+    donate = (0,) if plan.kind == "train" else ((1,) if plan.kind == "decode" else ())
+    compiled = (
+        jax.jit(
+            plan.fn,
+            in_shardings=plan.in_shardings,
+            out_shardings=plan.out_shardings,
+            donate_argnums=donate,
+        )
+        .lower(*plan.abstract_args)
+        .compile()
+    )
+    cfg = plan.cfg
+    if plan.kind == "train":
+        trips = [plan.scfg.w_max, cfg.n_repeats]
+    else:
+        trips = [cfg.n_repeats]
+    stats = loop_aware_collective_bytes(compiled.as_text(), trips)
+    return float(stats["weighted_bytes"])
+
+
+def roofline_cell(arch: str, shape_name: str, mesh, attn_impl_deploy: str = "blocked") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name}
+    reason = skip_reason(arch, shape_name)
+    if reason:
+        rec.update(status="skipped", reason=reason)
+        return rec
+    t0 = time.time()
+    accum = train_accum(arch) if shape.kind == "train" else 1
+
+    # FLOPs: unrolled naive-attention component variants (exact, extrapolated)
+    f1, _ = _lower_component(_variant(cfg, 1), shape, mesh, "naive", shape.kind)
+    f2, _ = _lower_component(_variant(cfg, 2), shape, mesh, "naive", shape.kind)
+
+    pat = len(cfg.block_pattern)
+    eff_repeats = cfg.n_layers / pat  # includes the tail as fractional repeats
+    per_sb_f, base_f = f2 - f1, f1 - (f2 - f1)
+    flops_dev = (base_f + eff_repeats * per_sb_f) * accum
+    if shape.kind == "train":
+        # component lowering used micro_bs rows; scale to the global batch
+        micro_rows = max(shape.global_batch // 16 // accum, 1) * 16
+        flops_dev *= shape.global_batch / (micro_rows * accum)
+
+    # collectives: loop-aware measurement of the full deployed step
+    coll_dev = _deploy_collectives(arch, shape_name, mesh)
+
+    bytes_dev = analytic_bytes(cfg, shape, accum)
+
+    t_compute = flops_dev / HW.PEAK_FLOPS_BF16
+    t_memory = bytes_dev / HW.HBM_BW
+    t_coll = coll_dev / HW.ICI_BW
+    dominant = max(
+        [("compute", t_compute), ("memory", t_memory), ("collective", t_coll)], key=lambda x: x[1]
+    )[0]
+    mf = model_flops(cfg, shape)
+    hlo_total = flops_dev * CHIPS
+    rec.update(
+        status="ok",
+        kind=shape.kind,
+        accum=accum,
+        flops_per_dev=flops_dev,
+        coll_bytes_per_dev=coll_dev,
+        hbm_bytes_per_dev=float(bytes_dev),
+        t_compute_s=t_compute,
+        t_memory_s=t_memory,
+        t_collective_s=t_coll,
+        bound=dominant,
+        model_flops=mf,
+        useful_flops_ratio=mf / max(hlo_total, 1.0),
+        roofline_frac=t_compute / max(t_compute, t_memory, t_coll),
+        analysis_s=round(time.time() - t0, 1),
+    )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--attn-impl", default="blocked")
+    ap.add_argument("--out", default="results/roofline.json")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh()
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    records = []
+    for arch in archs:
+        for shape_name in shapes:
+            try:
+                rec = roofline_cell(arch, shape_name, mesh, args.attn_impl)
+            except Exception as e:  # noqa: BLE001
+                rec = {"arch": arch, "shape": shape_name, "status": "error", "error": f"{type(e).__name__}: {e}"}
+            records.append(rec)
+            if rec["status"] == "ok":
+                print(
+                    f"{arch:28s} {shape_name:12s} compute {rec['t_compute_s']*1e3:9.3f}ms "
+                    f"mem {rec['t_memory_s']*1e3:9.3f}ms coll {rec['t_collective_s']*1e3:9.3f}ms "
+                    f"-> {rec['bound']:10s} useful {rec['useful_flops_ratio']:.2f} "
+                    f"roofline {rec['roofline_frac']:.2f}",
+                    flush=True,
+                )
+            else:
+                print(f"{arch:28s} {shape_name:12s} {rec['status']}: {rec.get('reason', rec.get('error'))}", flush=True)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(records, f, indent=1)
+    print(f"-> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

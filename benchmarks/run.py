@@ -1,0 +1,76 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Sections:
+  * paper figures 6-13 (convergence, static ratios, adaptive trajectory,
+    elastic cluster, AD-PSGD comparison, speedups) — run live (1 CPU device);
+  * kernel micro-benches (interpret mode, analytic TPU work in `derived`);
+  * roofline summary rows — read from results/roofline.json when present
+    (produced by ``python -m benchmarks.roofline``, which needs the 512-device
+    dry-run env and therefore runs as its own process).
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only substring]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _roofline_rows() -> list[tuple]:
+    path = os.path.join(os.path.dirname(__file__), "..", "results", "roofline.json")
+    if not os.path.exists(path):
+        return [("roofline_table", 0.0, "missing: run `python -m benchmarks.roofline` first")]
+    with open(path) as f:
+        recs = json.load(f)
+    rows = []
+    for r in recs:
+        if r.get("status") != "ok":
+            continue
+        name = f"roofline_{r['arch']}_{r['shape']}"
+        derived = (
+            f"bound={r['bound']} compute_ms={r['t_compute_s']*1e3:.3f} "
+            f"mem_ms={r['t_memory_s']*1e3:.3f} coll_ms={r['t_collective_s']*1e3:.3f} "
+            f"useful={r['useful_flops_ratio']:.2f} roofline_frac={r['roofline_frac']:.2f}"
+        )
+        rows.append((name, r.get("analysis_s", 0.0) * 1e6, derived))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="run benches whose name contains this")
+    ap.add_argument("--skip-paper", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import bench_kernels, paper_figs
+
+    benches = []
+    if not args.skip_paper:
+        benches += paper_figs.ALL
+    benches += bench_kernels.ALL
+
+    print("name,us_per_call,derived")
+    for bench in benches:
+        if args.only and args.only not in bench.__name__:
+            continue
+        t0 = time.time()
+        try:
+            rows = bench()
+        except Exception as e:  # noqa: BLE001
+            rows = [(bench.__name__, (time.time() - t0) * 1e6, f"ERROR {type(e).__name__}: {e}")]
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        sys.stdout.flush()
+
+    for name, us, derived in _roofline_rows():
+        if args.only and args.only not in name:
+            continue
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.checkpoint.checkpointer import restore_pytree, save_pytree, tree_paths
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager", "restore_pytree", "save_pytree", "tree_paths"]

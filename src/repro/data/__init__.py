@@ -1,0 +1,5 @@
+from repro.data.pipeline import HeteroBatcher
+from repro.data.sampler import ProportionalSampler
+from repro.data.synthetic import SyntheticImages, SyntheticLM
+
+__all__ = ["HeteroBatcher", "ProportionalSampler", "SyntheticImages", "SyntheticLM"]

@@ -1,0 +1,64 @@
+"""Host-side batch assembly for the allocation-aware SPMD step.
+
+The hetero train step (``dist/hetero_step.py``) consumes, per global step:
+
+* ``inputs/targets``: (n_ranks, W_max, micro_bs, seq) — rank-major padded
+  microbatch buffers.  Rank *i* reads only its first ``w_i`` microbatches
+  (the variable-trip-count loop); the padding rows are never touched but
+  keep SPMD shapes static.
+* ``alloc``: (n_ranks,) int32 — the per-rank trip counts from the
+  controller.
+
+``HeteroBatcher`` builds these from the :class:`ProportionalSampler` plan so
+the data semantics match the paper exactly (disjoint proportional shares,
+every sample once per epoch).
+"""
+
+from __future__ import annotations
+
+from typing import Iterator
+
+import numpy as np
+
+from repro.data.sampler import ProportionalSampler
+from repro.data.synthetic import SyntheticLM
+
+__all__ = ["HeteroBatcher"]
+
+
+class HeteroBatcher:
+    def __init__(
+        self,
+        dataset: SyntheticLM,
+        n_ranks: int,
+        micro_batch: int,
+        w_max: int,
+        seed: int = 0,
+    ) -> None:
+        self.dataset = dataset
+        self.n_ranks = n_ranks
+        self.micro_batch = micro_batch
+        self.w_max = w_max
+        self.sampler = ProportionalSampler(len(dataset), micro_batch, seed=seed)
+
+    def epoch(self, epoch: int, alloc: np.ndarray) -> Iterator[dict[str, np.ndarray]]:
+        """Yield one dict per aggregation (global step)."""
+        alloc = np.asarray(alloc, dtype=np.int32)
+        if alloc.max() > self.w_max:
+            raise ValueError(f"allocation {alloc.max()} exceeds W_max={self.w_max}")
+        plan = self.sampler.epoch_plan(epoch, alloc)
+        n_agg = len(plan[0])
+        S = self.dataset.seq_len
+        for a in range(n_agg):
+            inputs = np.zeros((self.n_ranks, self.w_max, self.micro_batch, S), np.int32)
+            targets = np.zeros_like(inputs)
+            for i in range(self.n_ranks):
+                idx = plan[i][a]
+                b = self.dataset.batch(idx)
+                k = alloc[i] * self.micro_batch
+                inputs[i, : alloc[i]] = b["inputs"][:k].reshape(alloc[i], self.micro_batch, S)
+                targets[i, : alloc[i]] = b["targets"][:k].reshape(alloc[i], self.micro_batch, S)
+            yield {"inputs": inputs, "targets": targets, "alloc": alloc.copy()}
+
+    def aggregations_per_epoch(self, alloc: np.ndarray) -> int:
+        return self.sampler.aggregations_per_epoch(alloc)

@@ -1,0 +1,60 @@
+"""Proportional task sampler — Algorithm 1 step 3 ("redistribute the
+subdataset of each worker according to the sample ratio").
+
+Given an allocation ``w`` (microbatches per worker per aggregation), the
+sampler partitions each epoch's shuffled index stream so worker *i* draws
+exactly ``w_i`` microbatches per aggregation, and *every* sample is used
+exactly once per epoch (the paper's "no remaining samples" requirement —
+property-tested).  When the controller reallocates between epochs, the next
+epoch's partition follows the new ratio; no sample is lost or duplicated.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["ProportionalSampler"]
+
+
+class ProportionalSampler:
+    def __init__(self, dataset_size: int, micro_batch: int, seed: int = 0) -> None:
+        if dataset_size % micro_batch:
+            raise ValueError("dataset_size must be a multiple of micro_batch")
+        self.dataset_size = dataset_size
+        self.micro_batch = micro_batch
+        self.seed = seed
+
+    def epoch_plan(self, epoch: int, alloc: np.ndarray) -> list[list[np.ndarray]]:
+        """Partition one epoch for allocation ``alloc``.
+
+        Returns ``plan[worker][aggregation]`` = int array of
+        ``alloc[worker] * micro_batch`` sample indices.  The number of
+        aggregations is ``dataset_size / (sum(alloc) * micro_batch)`` —
+        the last partial aggregation (if any) keeps proportions by
+        truncating every worker's share equally.
+        """
+        alloc = np.asarray(alloc, dtype=np.int64)
+        if np.any(alloc < 1):
+            raise ValueError("every worker needs at least one microbatch")
+        C = int(alloc.sum())
+        agg_samples = C * self.micro_batch
+        n_agg = self.dataset_size // agg_samples
+        if n_agg == 0:
+            raise ValueError(
+                f"dataset ({self.dataset_size}) smaller than one aggregation ({agg_samples})"
+            )
+        rng = np.random.default_rng(self.seed * 7_368_787 + epoch)
+        perm = rng.permutation(self.dataset_size)
+
+        plan: list[list[np.ndarray]] = [[] for _ in alloc]
+        cursor = 0
+        bounds = np.concatenate([[0], np.cumsum(alloc)]) * self.micro_batch
+        for _ in range(n_agg):
+            block = perm[cursor : cursor + agg_samples]
+            for i in range(len(alloc)):
+                plan[i].append(block[bounds[i] : bounds[i + 1]])
+            cursor += agg_samples
+        return plan
+
+    def aggregations_per_epoch(self, alloc: np.ndarray) -> int:
+        return self.dataset_size // (int(np.sum(alloc)) * self.micro_batch)

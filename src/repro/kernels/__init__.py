@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical compute substrate.
+
+The paper's contribution is scheduling (kernel-free); these cover the
+compute hot spots the technique sits on.  Each kernel has a pure-jnp oracle
+in ``ref.py`` and a jit'd dispatch wrapper in ``ops.py``:
+
+* ``flash_attention`` — blocked causal GQA attention + sliding window
+* ``rwkv6_scan``      — chunked RWKV6 recurrence (MXU-shaped)
+* ``weighted_accum``  — fused axpy for the gradient-accumulation loop
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,49 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+``interpret`` defaults to True because this container is CPU-only; on a real
+TPU deployment set ``REPRO_PALLAS_INTERPRET=0`` (or pass interpret=False)
+and the same call sites compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rwkv6_scan as _rw
+from repro.kernels import weighted_accum as _wa
+
+__all__ = ["flash_attention", "rwkv6_scan", "weighted_accum", "weighted_accum_tree"]
+
+
+def _interpret_default() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def flash_attention(q, k, v, q_pos=None, k_pos=None, *, causal=True, window=None, softcap=0.0, q_offset=0, interpret=None):
+    """Signature-compatible with models.attention's kernel hook.
+
+    q_pos/k_pos are accepted for interface parity; the kernel derives
+    positions from q_offset (contiguous layouts only).
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap, q_offset=q_offset, interpret=interpret
+    )
+
+
+def rwkv6_scan(r, k, v, w, u, s0=None, chunk: int = 32, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _rw.rwkv6_scan(r, k, v, w, u, s0, chunk=chunk, interpret=interpret)
+
+
+def weighted_accum(acc, g, scale, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _wa.weighted_accum(acc, g, jnp.asarray(scale, jnp.float32), interpret=interpret)
+
+
+def weighted_accum_tree(acc_tree, g_tree, scale, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _wa.weighted_accum_tree(acc_tree, g_tree, scale, interpret=interpret)

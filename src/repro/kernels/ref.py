@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are deliberately the *simplest correct* implementations — no blocking,
+no online softmax — so kernel tests compare against arithmetic that is easy
+to audit.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref", "rwkv6_scan_ref", "weighted_accum_ref"]
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,  # (B, Sq, H, Dh)
+    k: jnp.ndarray,  # (B, Sk, Hkv, Dh)
+    v: jnp.ndarray,  # (B, Sk, Hkv, Dh)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float = 0.0,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Materialized-scores attention with GQA grouping.
+
+    ``q_offset``: absolute position of q[0] (decode: Sk_cached). Causality is
+    ``k_pos <= q_pos`` with ``q_pos = q_offset + arange(Sq)``.
+    """
+    B, Sq, H, Dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, Dh).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32)) * (Dh**-0.5)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > (q_pos[:, None] - window)
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def rwkv6_scan_ref(r, k, v, w, u, s0=None):
+    """Sequential RWKV6 recurrence (same as models.rwkv.wkv_scan, restated
+    here so the kernels package is self-contained).
+
+    r,k,v,w: (B,T,H,D) fp32; u: (H,D); s0: (B,H,D,D) or None.
+    Returns (y (B,T,H,D), s_end).
+    """
+    B, T, H, D = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((B, H, D, D), jnp.float32)
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        return wt[..., :, None] * s + kv, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    s_end, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), s_end
+
+
+def weighted_accum_ref(acc: jnp.ndarray, g: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """acc + scale * g, computed in fp32, cast back to acc.dtype."""
+    return (acc.astype(jnp.float32) + scale.astype(jnp.float32) * g.astype(jnp.float32)).astype(
+        acc.dtype
+    )

@@ -1,0 +1,39 @@
+"""Production meshes.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — smoke tests must keep seeing 1 CPU device.
+
+Single pod: (16, 16) = ("data", "model") — 256 x TPU v5e.
+Multi-pod:  (2, 16, 16) = ("pod", "data", "model") — 2 pods over DCN.
+
+The paper's allocation axis is "data" on a single pod (plain-DP groups) and
+"pod" across pods (per-pod task allocation) — see DESIGN.md §5 and the
+legality invariant in dist/hetero_step.py.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+__all__ = ["make_production_mesh", "make_test_mesh", "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(4, 2), axes=("data", "model")):
+    """Small mesh for multi-device tests (requires host-device override)."""
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+class HW:
+    """TPU v5e roofline constants (per chip)."""
+
+    PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+    HBM_BW = 819e9  # bytes/s
+    ICI_BW = 50e9  # bytes/s per link
+    HBM_BYTES = 16e9  # capacity

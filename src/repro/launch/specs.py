@@ -1,0 +1,265 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape x mesh) cell.
+
+``input_specs`` returns everything ``dryrun.py`` needs to lower a cell
+without allocating a byte: abstract params/opt-state/caches (via
+``jax.eval_shape``) and abstract batch inputs, each paired with its
+NamedSharding.  The modality stubs live here: musicgen feeds EnCodec token
+streams (int32, vocab 2048); llava feeds precomputed projected patch+text
+embeddings (bf16, (B, S, d_model)).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, train_accum
+from repro.configs.shapes import SHAPES, ShapeSpec
+from repro.dist.hetero_step import HeteroStepConfig
+from repro.dist.sharding import cache_specs, param_specs
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+__all__ = ["CellPlan", "plan_cell", "FSDP_THRESHOLD"]
+
+# params above this use FSDP (and hence masked-mode allocation on single-pod)
+FSDP_THRESHOLD = 4e9
+
+
+@dataclasses.dataclass
+class CellPlan:
+    arch: str
+    shape: ShapeSpec
+    cfg: ModelConfig
+    kind: str  # train | prefill | decode
+    scfg: HeteroStepConfig | None  # train only
+    abstract_args: tuple  # positional abstract inputs for the lowered fn
+    in_shardings: tuple
+    out_shardings: Any
+    fn: Any  # the python callable to jit
+    notes: str = ""
+
+
+def _ns(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _uses_fsdp(cfg: ModelConfig) -> bool:
+    return cfg.param_count()["total"] > FSDP_THRESHOLD
+
+
+def plan_cell(arch: str, shape_name: str, mesh: Mesh, hetero: bool = False) -> CellPlan:
+    """Build the lowering plan for one cell.
+
+    ``hetero=True`` forces while-mode allocation (where legal) with headroom
+    in W_max — the paper's system; default is the uniform baseline.
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    multi_pod = "pod" in mesh.axis_names
+    dp = _dp_axes(mesh)
+
+    params_shape = jax.eval_shape(lambda k: transformer.init_params(cfg, k), jax.random.PRNGKey(0))
+    pspecs = param_specs(params_shape, mesh, fsdp=_uses_fsdp(cfg))
+    pshard = jax.tree.map(lambda s: _ns(mesh, s), pspecs)
+
+    if shape.kind == "train":
+        return _plan_train(arch, shape, cfg, mesh, params_shape, hetero)
+    if shape.kind == "prefill":
+        return _plan_prefill(arch, shape, cfg, mesh, params_shape, pshard, dp)
+    return _plan_decode(arch, shape, cfg, mesh, params_shape, pshard, dp)
+
+
+# ---------------------------------------------------------------------------
+
+
+def _plan_train(arch, shape, cfg, mesh, params_shape, hetero) -> CellPlan:
+    from repro.dist.hetero_step import build_train_step
+    from repro.optim import AdamWConfig
+
+    multi_pod = "pod" in mesh.axis_names
+    fsdp = _uses_fsdp(cfg)
+    total_params = cfg.param_count()["total"]
+    huge = total_params > 1e11  # jamba-class: needs every memory lever
+    accum = train_accum(arch)
+
+    if multi_pod and huge:
+        # 398B-class: full ZeRO-3 over (pod, data) — only masked allocation is
+        # legal (params sharded over the allocation axis), see hetero_step.
+        alloc_axis, mode = "pod", "masked"
+        fsdp_axes: tuple[str, ...] = ("pod", "data")
+        accum = min(accum, 8)
+    elif multi_pod and (cfg.moe is not None or fsdp):
+        # XLA limitation (not ours): the SPMD partitioner CHECK-fails
+        # (spmd_partitioner_util.cc:504) on gather/all-to-all patterns (FSDP
+        # param gathers, MoE dispatch) inside a partial-auto shard_map over
+        # "pod".  Masked allocation over "pod" is numerically identical and
+        # partitions cleanly; true variable-trip-count while-mode is used for
+        # every non-FSDP arch.  Recorded in DESIGN.md §5.
+        alloc_axis, mode = "pod", "masked"
+        fsdp_axes = ("data",)
+        accum = min(accum, 8)
+    elif multi_pod:
+        alloc_axis, mode = "pod", "while"  # params never sharded over pod
+        fsdp_axes = ("data",)
+        accum = min(accum, 8)  # keep micro_bs divisible by the data axis
+    elif fsdp:
+        alloc_axis, mode = "data", "masked"  # FSDP over data: while illegal
+        fsdp_axes = ("data",)
+    else:
+        alloc_axis, mode = "data", "while"
+        fsdp_axes = ("data",)
+
+    pspecs = param_specs(params_shape, mesh, fsdp=fsdp, fsdp_axes=fsdp_axes)
+
+    R = mesh.shape[alloc_axis]
+    per_rank_seqs = shape.global_batch // R
+    micro_bs = max(per_rank_seqs // accum, 1)
+    w = per_rank_seqs // micro_bs  # uniform allocation per rank
+    w_max = int(w * 1.5) if hetero else w
+
+    scfg = HeteroStepConfig(
+        w_max=w_max,
+        micro_bs=micro_bs,
+        seq_len=shape.seq_len,
+        mode=mode,
+        alloc_axis=alloc_axis,
+        fsdp=fsdp,
+        optimizer="adamw",
+        grad_dtype="bfloat16" if huge else "float32",
+    )
+    moment_dtype = "bfloat16" if total_params > 2e10 else "float32"
+    opt_cfg = AdamWConfig(moment_dtype=moment_dtype)
+
+    step_fn = build_train_step(cfg, scfg, mesh, opt_cfg=opt_cfg, jit=False)
+
+    from repro.optim import adamw_init
+
+    state_shape = jax.eval_shape(
+        lambda p: {"params": p, "opt": adamw_init(p, opt_cfg), "step": jnp.zeros((), jnp.int32)},
+        params_shape,
+    )
+    opt_specs = {
+        "mu": pspecs,
+        "nu": pspecs,
+        "count": P(),
+    }
+    state_specs = {"params": pspecs, "opt": opt_specs, "step": P()}
+    state_shard = jax.tree.map(lambda s: _ns(mesh, s), state_specs)
+
+    # batch: (R, W_max, mb, S); mb sharded over "data" in multi-pod meshes
+    tok_dt = jnp.int32
+    if multi_pod and micro_bs % mesh.shape["data"] == 0:
+        bspec = P("pod", None, "data", None)
+    else:
+        bspec = P(scfg.alloc_axis, None, None, None)
+    batch_shape = {
+        "inputs": jax.ShapeDtypeStruct((R, scfg.w_max, micro_bs, shape.seq_len), tok_dt),
+        "targets": jax.ShapeDtypeStruct((R, scfg.w_max, micro_bs, shape.seq_len), tok_dt),
+        "alloc": jax.ShapeDtypeStruct((R,), jnp.int32),
+    }
+    batch_shard = {
+        "inputs": _ns(mesh, bspec),
+        "targets": _ns(mesh, bspec),
+        "alloc": _ns(mesh, P(scfg.alloc_axis)),
+    }
+    metrics_shard = jax.tree.map(
+        lambda _: _ns(mesh, P()), {"loss": 0, "tokens": 0, "grad_norm": 0, "lr": 0}
+    )
+    return CellPlan(
+        arch=arch,
+        shape=shape,
+        cfg=cfg,
+        kind="train",
+        scfg=scfg,
+        abstract_args=(state_shape, batch_shape),
+        in_shardings=(state_shard, batch_shard),
+        out_shardings=(state_shard, metrics_shard),
+        fn=step_fn,
+        notes=f"mode={mode} alloc_axis={alloc_axis} fsdp={fsdp} accum={w}x{micro_bs} moments={moment_dtype}",
+    )
+
+
+def _plan_prefill(arch, shape, cfg, mesh, params_shape, pshard, dp) -> CellPlan:
+    B, S = shape.global_batch, shape.seq_len
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    b_ax = dp if B % dp_size == 0 else None
+    b_ax = b_ax if not isinstance(b_ax, tuple) or len(b_ax) > 1 else b_ax[0]
+
+    if cfg.embeds_input:
+        tokens = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+        tspec = P(b_ax, None, None)
+    else:
+        tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        tspec = P(b_ax, None)
+
+    act = {
+        "h": _ns(mesh, P(b_ax, None, None)),
+        "logits": _ns(mesh, P(b_ax, None, "model")),
+    }
+
+    def prefill(params, toks):
+        logits, _ = transformer.forward(params, toks, cfg, attn_impl="blocked", shardings=act)
+        return logits[:, -1, :]  # next-token logits (full logits would be 2x seq bytes)
+
+    return CellPlan(
+        arch=arch,
+        shape=shape,
+        cfg=cfg,
+        kind="prefill",
+        scfg=None,
+        abstract_args=(params_shape, tokens),
+        in_shardings=(pshard, _ns(mesh, tspec)),
+        out_shardings=_ns(mesh, P(b_ax, "model")),
+        fn=prefill,
+        notes="blocked attention; logits for last position",
+    )
+
+
+def _plan_decode(arch, shape, cfg, mesh, params_shape, pshard, dp) -> CellPlan:
+    B, S = shape.global_batch, shape.seq_len
+    cache_shape = jax.eval_shape(lambda: transformer.init_cache(cfg, B, S))
+    cspecs = cache_specs(cache_shape, mesh, dp_axes=dp)
+    cshard = jax.tree.map(lambda s: _ns(mesh, s), cspecs)
+
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    b_ax = dp if B % dp_size == 0 else None
+    b_ax = b_ax if not isinstance(b_ax, tuple) or len(b_ax) > 1 else b_ax[0]
+
+    if cfg.embeds_input:
+        tokens = jax.ShapeDtypeStruct((B, cfg.d_model), jnp.bfloat16)
+        tspec = P(b_ax, None)
+    else:
+        tokens = jax.ShapeDtypeStruct((B,), jnp.int32)
+        tspec = P(b_ax)
+
+    act = {"h": _ns(mesh, P(b_ax, None, None)), "logits": _ns(mesh, P(b_ax, "model"))}
+
+    def serve_step(params, cache, toks):
+        return transformer.decode_step(params, cache, toks, cfg, shardings=act)
+
+    return CellPlan(
+        arch=arch,
+        shape=shape,
+        cfg=cfg,
+        kind="decode",
+        scfg=None,
+        abstract_args=(params_shape, cache_shape, tokens),
+        in_shardings=(pshard, cshard, _ns(mesh, tspec)),
+        out_shardings=(_ns(mesh, P(b_ax, "model")), cshard),
+        fn=serve_step,
+        notes=f"KV/SSM cache len {S}",
+    )

@@ -1,0 +1,25 @@
+"""Pure-JAX model zoo covering all assigned architectures."""
+
+from repro.models.config import LayerSpec, MambaConfig, ModelConfig, MoEConfig, RWKVConfig
+from repro.models.transformer import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    param_count,
+)
+
+__all__ = [
+    "LayerSpec",
+    "MambaConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "RWKVConfig",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "loss_fn",
+    "param_count",
+]

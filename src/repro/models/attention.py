@@ -1,0 +1,273 @@
+"""Attention: GQA/MQA/MHA, causal + sliding-window, train / prefill / decode.
+
+Three interchangeable implementations (numerically equivalent, tested):
+
+* ``naive``   — materializes (Sq, Sk) scores. Oracle + tiny smoke tests.
+* ``blocked`` — pure-JAX flash algorithm: double scan over (q-chunk, kv-chunk)
+  with online softmax. Bounded memory; this is what the dry-run lowers for
+  large shapes, and what XLA sees for the roofline.
+* ``flash``   — Pallas TPU kernel (``repro.kernels.flash_attention``),
+  interpret-mode on CPU. Wired lazily to avoid import cycles.
+
+GQA avoids materializing repeated KV heads by grouping query heads:
+q is viewed as (B, S, Hkv, G, Dh) and contracted against k (B, S, Hkv, Dh).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, linear, rmsnorm, rmsnorm_init
+from repro.models.rope import apply_rope
+
+__all__ = ["init_attention", "attention_train", "attention_decode"]
+
+NEG_INF = -2.0e38  # large finite; avoids NaN from (-inf) - (-inf)
+
+
+def init_attention(key: jax.Array, cfg: ModelConfig) -> dict[str, Any]:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    dt = cfg.dtype("param")
+    p = {
+        "wq": dense_init(kq, cfg.d_model, cfg.q_dim, dt),
+        "wk": dense_init(kk, cfg.d_model, cfg.kv_dim, dt),
+        "wv": dense_init(kv, cfg.d_model, cfg.kv_dim, dt),
+        "wo": dense_init(ko, cfg.q_dim, cfg.d_model, dt, scale=(cfg.q_dim * 2 * cfg.n_layers) ** -0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(cfg.head_dim, dt)
+        p["k_norm"] = rmsnorm_init(cfg.head_dim, dt)
+    return p
+
+
+def _qkv(p: dict, x: jnp.ndarray, cfg: ModelConfig, positions: jnp.ndarray):
+    B, S, _ = x.shape
+    q = linear(x, p["wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = linear(x, p["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = linear(x, p["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask_bias(q_pos: jnp.ndarray, k_pos: jnp.ndarray, window: int | None) -> jnp.ndarray:
+    """(Sq, Sk) additive bias: 0 where k may attend, NEG_INF otherwise."""
+    causal = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        causal &= k_pos[None, :] > (q_pos[:, None] - window)
+    return jnp.where(causal, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _softcap(scores: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap <= 0.0:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+# ---------------------------------------------------------------------------
+# naive (oracle)
+# ---------------------------------------------------------------------------
+
+
+def _attend_naive(q, k, v, q_pos, k_pos, cfg: ModelConfig, window):
+    B, Sq, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, Dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * (Dh**-0.5)
+    scores = _softcap(scores, cfg.attn_logit_softcap)
+    scores = scores + _mask_bias(q_pos, k_pos, window)[None, None, None]
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(B, Sq, H, Dh)
+
+
+# ---------------------------------------------------------------------------
+# blocked (pure-JAX flash; default for large shapes)
+# ---------------------------------------------------------------------------
+
+
+def _attend_blocked(q, k, v, q_pos, k_pos, cfg: ModelConfig, window, q_chunk=512, kv_chunk=512):
+    """Online-softmax double scan. Memory O(q_chunk * kv_chunk) scores."""
+    B, Sq, H, Dh = q.shape
+    Sk = k.shape[1]
+    Hkv = k.shape[2]
+    G = H // Hkv
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    assert Sq % q_chunk == 0 and Sk % kv_chunk == 0, (Sq, q_chunk, Sk, kv_chunk)
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    scale = Dh**-0.5
+
+    qg = q.reshape(B, nq, q_chunk, Hkv, G, Dh).astype(jnp.float32)
+    kc = k.reshape(B, nk, kv_chunk, Hkv, Dh).astype(jnp.float32)
+    vc = v.reshape(B, nk, kv_chunk, Hkv, Dh).astype(jnp.float32)
+    qp = q_pos.reshape(nq, q_chunk)
+    kp = k_pos.reshape(nk, kv_chunk)
+
+    def q_step(_, qi):
+        qblk = qg[:, qi]  # (B, qc, Hkv, G, Dh)
+        qpos = qp[qi]
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kc[:, ki]) * scale
+            s = _softcap(s, cfg.attn_logit_softcap)
+            s = s + _mask_bias(qpos, kp[ki], window)[None, None, None]
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum("bhgqk,bkhd->bhgqd", p, vc[:, ki])
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_chunk, Dh), jnp.float32)
+        # checkpoint: recompute the (qc, kc) score block in the backward pass
+        # instead of saving it (flash-attention-style bwd; the score tensors
+        # otherwise dominate activation memory at long seq).
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(kv_step), (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-37)[..., None]  # (B,Hkv,G,qc,Dh)
+        return None, out.transpose(0, 3, 1, 2, 4)  # (B,qc,Hkv,G,Dh)
+
+    _, outs = jax.lax.scan(jax.checkpoint(q_step), None, jnp.arange(nq))  # (nq,B,qc,Hkv,G,Dh)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, Dh)
+    return out.astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+
+def _attend(q, k, v, q_pos, k_pos, cfg: ModelConfig, window, impl: str):
+    if impl == "naive":
+        return _attend_naive(q, k, v, q_pos, k_pos, cfg, window)
+    if impl == "blocked":
+        return _attend_blocked(q, k, v, q_pos, k_pos, cfg, window)
+    if impl == "flash":
+        from repro.kernels import ops as kops  # lazy: avoid import cycle
+
+        return kops.flash_attention(
+            q, k, v, q_pos, k_pos,
+            causal=True,
+            window=window,
+            softcap=cfg.attn_logit_softcap,
+        )
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+def attention_train(
+    p: dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    attn_type: str,
+    positions: jnp.ndarray | None = None,
+    impl: str = "blocked",
+) -> jnp.ndarray:
+    """Full-sequence (training / prefill) attention. x: (B, S, d) -> (B, S, d)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    window = cfg.sliding_window if attn_type == "local" else None
+    q, k, v = _qkv(p, x, cfg, positions)
+    out = _attend(q, k, v, positions, positions, cfg, window, impl)
+    return linear(out.reshape(B, S, cfg.q_dim), p["wo"])
+
+
+def attention_decode(
+    p: dict,
+    x: jnp.ndarray,
+    cache: dict,
+    cfg: ModelConfig,
+    attn_type: str,
+) -> tuple[jnp.ndarray, dict]:
+    """One-token decode against a (possibly ring-buffer) KV cache.
+
+    x: (B, 1, d); cache: {"k","v": (B, S_cache, Hkv, Dh), "pos": (S_cache,),
+    "index": ()}.  ``S_cache`` may be smaller than the context (windowed
+    local-attention cache): entries live at slot ``pos % S_cache`` and
+    ``pos`` records each slot's absolute position (-1 = empty), so masking is
+    exact across wraparound.  Returns (out (B,1,d), new cache).
+    """
+    B, one, _ = x.shape
+    assert one == 1, "decode expects a single new token"
+    index = cache["index"]
+    positions = jnp.broadcast_to(jnp.reshape(index, (1, 1)), (B, 1))
+    q, k_new, v_new = _qkv(p, x, cfg, positions)
+
+    S_cache = cache["k"].shape[1]
+    slot = jnp.mod(index, S_cache)
+    int8_kv = cache["k"].dtype == jnp.int8
+    if int8_kv:
+        k_q, k_s = _quant_int8(k_new)
+        v_q, v_s = _quant_int8(v_new)
+        k_i = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_q, slot, axis=1)
+        v_i = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_q, slot, axis=1)
+        ks = jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], k_s, slot, axis=1)
+        vs = jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], v_s, slot, axis=1)
+        k = k_i.astype(jnp.bfloat16) * ks[..., None]
+        v = v_i.astype(jnp.bfloat16) * vs[..., None]
+    else:
+        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.reshape(index, (1,)), slot, axis=0
+    )
+
+    Hkv = cfg.n_kv_heads
+    G = cfg.n_heads // Hkv
+    Dh = cfg.head_dim
+    qg = q.reshape(B, 1, Hkv, G, Dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * (Dh**-0.5)
+    scores = _softcap(scores, cfg.attn_logit_softcap)
+    valid = (pos >= 0) & (pos <= index)  # (S_cache,)
+    if attn_type == "local":
+        valid &= pos > (index - cfg.sliding_window)
+    scores = jnp.where(valid[None, None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v).reshape(B, 1, cfg.q_dim)
+    new_cache = {"pos": pos, "index": index + 1}
+    if int8_kv:
+        new_cache.update(k=k_i, v=v_i, k_scale=ks, v_scale=vs)
+    else:
+        new_cache.update(k=k, v=v)
+    return linear(out.astype(x.dtype), p["wo"]), new_cache
+
+
+def _quant_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-(batch, position, head) int8 quantization.
+
+    x: (B, S, H, Dh) -> (int8 same shape, bf16 scales (B, S, H))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None, window: bool = False) -> dict:
+    """``window=True``: ring buffer of sliding_window slots (local layers)."""
+    dt = dtype or cfg.dtype("compute")
+    s_cache = min(max_seq, cfg.sliding_window) if window else max_seq
+    cache = {
+        "pos": jnp.full((s_cache,), -1, jnp.int32),
+        "index": jnp.zeros((), jnp.int32),
+    }
+    if cfg.kv_cache_dtype == "int8":
+        cache["k"] = jnp.zeros((batch, s_cache, cfg.n_kv_heads, cfg.head_dim), jnp.int8)
+        cache["v"] = jnp.zeros((batch, s_cache, cfg.n_kv_heads, cfg.head_dim), jnp.int8)
+        cache["k_scale"] = jnp.zeros((batch, s_cache, cfg.n_kv_heads), jnp.bfloat16)
+        cache["v_scale"] = jnp.zeros((batch, s_cache, cfg.n_kv_heads), jnp.bfloat16)
+    else:
+        cache["k"] = jnp.zeros((batch, s_cache, cfg.n_kv_heads, cfg.head_dim), dt)
+        cache["v"] = jnp.zeros((batch, s_cache, cfg.n_kv_heads, cfg.head_dim), dt)
+    return cache

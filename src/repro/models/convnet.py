@@ -1,0 +1,182 @@
+"""The paper's own experiment models: ConvNet (MNIST), VGG-s / ResNet-s (CIFAR10).
+
+The paper validates convergence-invariance of task allocation on ConvNet,
+VGG11/16/19 and ResNet18/50.  We implement faithful-but-scaled versions (the
+claim being tested — ratio does not change convergence — is architecture
+independent; channel widths are scaled so the CPU benchmarks finish).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_convnet", "convnet_forward", "init_vgg", "vgg_forward", "init_resnet", "resnet_forward", "xent_loss"]
+
+
+def _conv_init(key, kh, kw, cin, cout, dtype=jnp.float32):
+    fan_in = kh * kw * cin
+    return (jax.random.truncated_normal(key, -2, 2, (kh, kw, cin, cout)) * (2.0 / fan_in) ** 0.5).astype(dtype)
+
+
+def _dense_init(key, din, dout, dtype=jnp.float32):
+    return (jax.random.truncated_normal(key, -2, 2, (din, dout)) * din**-0.5).astype(dtype)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def _maxpool(x, k=2):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, k, k, 1), "VALID")
+
+
+def _gn(x, gamma, beta, groups=8, eps=1e-5):
+    """GroupNorm stand-in for BatchNorm (batch-size independent — required:
+    task allocation changes per-worker batch sizes, and the paper's
+    convergence-invariance argument assumes batch statistics don't couple
+    workers)."""
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    xg = x.reshape(B, H, W, g, C // g)
+    mu = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xn = ((xg - mu) * jax.lax.rsqrt(var + eps)).reshape(B, H, W, C)
+    return xn * gamma + beta
+
+
+# ---------------------------------------------------------------------------
+# ConvNet (paper §IV.B: 2 conv + 2 maxpool + 1 fc, MNIST)
+# ---------------------------------------------------------------------------
+
+
+def init_convnet(key, n_classes=10, width=16, in_ch=1):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "c1": _conv_init(k1, 5, 5, in_ch, width),
+        "c2": _conv_init(k2, 5, 5, width, 2 * width),
+        "fc": _dense_init(k3, 2 * width * 7 * 7, n_classes),
+    }
+
+
+def convnet_forward(p, x):
+    """x: (B, 28, 28, 1) -> logits (B, n_classes)."""
+    x = _maxpool(jax.nn.relu(_conv(x, p["c1"])))
+    x = _maxpool(jax.nn.relu(_conv(x, p["c2"])))
+    return x.reshape(x.shape[0], -1) @ p["fc"]
+
+
+# ---------------------------------------------------------------------------
+# VGG-s (CIFAR10, 32x32)
+# ---------------------------------------------------------------------------
+
+VGG_PLANS = {
+    "vgg11s": (1, 1, 2, 2, 2),
+    "vgg16s": (2, 2, 3, 3, 3),
+    "vgg19s": (2, 2, 4, 4, 4),
+}
+
+
+def init_vgg(key, plan="vgg11s", n_classes=10, width=16, in_ch=3):
+    blocks = VGG_PLANS[plan]
+    params = {"convs": [], "gns": []}
+    cin = in_ch
+    keys = jax.random.split(key, sum(blocks) + 1)
+    ki = 0
+    for bi, n in enumerate(blocks):
+        cout = width * (2 ** min(bi, 3))
+        for _ in range(n):
+            params["convs"].append(_conv_init(keys[ki], 3, 3, cin, cout))
+            params["gns"].append(
+                {"gamma": jnp.ones((cout,), jnp.float32), "beta": jnp.zeros((cout,), jnp.float32)}
+            )
+            cin = cout
+            ki += 1
+    params["fc"] = _dense_init(keys[ki], cin, n_classes)
+    return params
+
+
+def vgg_forward(p, x, plan="vgg11s"):
+    blocks = VGG_PLANS[plan]
+    li = 0
+    for n in blocks:
+        for _ in range(n):
+            x = jax.nn.relu(_gn(_conv(x, p["convs"][li]), p["gns"][li]["gamma"], p["gns"][li]["beta"]))
+            li += 1
+        x = _maxpool(x)
+    x = x.mean(axis=(1, 2))
+    return x @ p["fc"]
+
+
+# ---------------------------------------------------------------------------
+# ResNet-s (CIFAR10)
+# ---------------------------------------------------------------------------
+
+
+RESNET_PLANS = {18: (2, 2, 2, 2), 50: (3, 4, 6, 3)}
+
+
+def _resnet_strides(depth: int):
+    """Static (stride, has_proj) schedule per block, derived from the plan."""
+    plan = RESNET_PLANS[depth]
+    out = []
+    cin_mult, width_mult = 1, 1
+    for si, n in enumerate(plan):
+        width_mult = 2**si
+        for bi in range(n):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            out.append((stride, stride != 1 or cin_mult != width_mult))
+            cin_mult = width_mult
+    return out
+
+
+def init_resnet(key, depth=18, n_classes=10, width=16, in_ch=3):
+    """depth 18 -> (2,2,2,2) basic blocks; depth 50 -> (3,4,6,3)."""
+    plan = RESNET_PLANS[depth]
+    sched = _resnet_strides(depth)
+    n_keys = 2 + sum(plan) * 3
+    keys = iter(jax.random.split(key, n_keys))
+    params = {"stem": _conv_init(next(keys), 3, 3, in_ch, width), "blocks": []}
+    cin = width
+    bi_flat = 0
+    for si, n in enumerate(plan):
+        cout = width * (2**si)
+        for _ in range(n):
+            _, has_proj = sched[bi_flat]
+            blk = {
+                "c1": _conv_init(next(keys), 3, 3, cin, cout),
+                "c2": _conv_init(next(keys), 3, 3, cout, cout),
+                "gn1": {"gamma": jnp.ones((cout,)), "beta": jnp.zeros((cout,))},
+                "gn2": {"gamma": jnp.ones((cout,)), "beta": jnp.zeros((cout,))},
+            }
+            if has_proj:
+                blk["proj"] = _conv_init(next(keys), 1, 1, cin, cout)
+            else:
+                _ = next(keys)
+            params["blocks"].append(blk)
+            cin = cout
+            bi_flat += 1
+    params["fc"] = _dense_init(next(keys), cin, n_classes)
+    return params
+
+
+def resnet_forward(p, x, depth=18):
+    sched = _resnet_strides(depth)
+    x = jax.nn.relu(_conv(x, p["stem"]))
+    for blk, (stride, _) in zip(p["blocks"], sched, strict=True):
+        h = jax.nn.relu(_gn(_conv(x, blk["c1"], stride), blk["gn1"]["gamma"], blk["gn1"]["beta"]))
+        h = _gn(_conv(h, blk["c2"]), blk["gn2"]["gamma"], blk["gn2"]["beta"])
+        sc = _conv(x, blk["proj"], stride) if "proj" in blk else x
+        x = jax.nn.relu(h + sc)
+    x = x.mean(axis=(1, 2))
+    return x @ p["fc"]
+
+
+def xent_loss(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()

@@ -1,0 +1,77 @@
+"""Base layers: parameter init + pure-function application.
+
+No flax — parameters are plain nested dicts of ``jnp`` arrays so they shard
+transparently through ``jit`` in/out shardings and stack cleanly for
+scan-over-layers.  Naming conventions matter: ``dist/sharding.py`` assigns
+PartitionSpecs by parameter *path*, so keys here are part of the contract.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init",
+    "embed_init",
+    "linear",
+    "rmsnorm_init",
+    "rmsnorm",
+    "layernorm_init",
+    "layernorm",
+    "norm_apply",
+    "split_keys",
+]
+
+
+def split_keys(key: jax.Array, n: int) -> Sequence[jax.Array]:
+    return jax.random.split(key, n)
+
+
+def dense_init(key: jax.Array, d_in: int, d_out: int, dtype, scale: float | None = None) -> jnp.ndarray:
+    """Truncated-normal fan-in init (LeCun-ish); matches common LM practice."""
+    std = scale if scale is not None else d_in**-0.5
+    return (jax.random.truncated_normal(key, -3.0, 3.0, (d_in, d_out)) * std).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.truncated_normal(key, -3.0, 3.0, (vocab, d)) * (d**-0.5)).astype(dtype)
+
+
+def linear(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Bias-free matmul on the trailing dim (all assigned archs are bias-free)."""
+    return x @ w.astype(x.dtype)
+
+
+def rmsnorm_init(d: int, dtype) -> jnp.ndarray:
+    return jnp.zeros((d,), dtype=dtype)  # gemma-style "zero-centered" gain: (1 + g)
+
+
+def rmsnorm(x: jnp.ndarray, gain: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm with fp32 accumulation, (1+g) gain (robust to zero init)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + gain.astype(jnp.float32))).astype(dt)
+
+
+def layernorm_init(d: int, dtype) -> dict:
+    return {"gain": jnp.zeros((d,), dtype=dtype), "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layernorm(x: jnp.ndarray, p: dict, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["gain"].astype(jnp.float32)) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+def norm_apply(x: jnp.ndarray, p, kind: str, eps: float) -> jnp.ndarray:
+    if kind == "rmsnorm":
+        return rmsnorm(x, p, eps)
+    return layernorm(x, p, eps)

@@ -1,0 +1,154 @@
+"""Mamba-1 selective-SSM block (jamba's non-attention layer).
+
+TPU adaptation: the recurrence ``h_t = Abar_t * h_{t-1} + Bx_t`` (elementwise
+in (d_inner, d_state)) is computed *chunked*: an outer ``lax.scan`` carries
+the state across chunks while an ``associative_scan`` parallelizes inside the
+chunk.  This bounds the materialized (B, T, d_inner, d_state) tensor to the
+chunk length — the HBM-footprint knob — while keeping everything visible to
+XLA (log-depth scan, MXU-friendly einsums), instead of porting the CUDA
+selective-scan kernel 1:1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, linear
+
+__all__ = ["init_mamba", "mamba_train", "mamba_decode", "init_mamba_cache"]
+
+
+def init_mamba(key: jax.Array, cfg: ModelConfig) -> dict:
+    m = cfg.mamba
+    assert m is not None
+    dt = cfg.dtype("param")
+    d, di, ds = cfg.d_model, m.d_inner, m.d_state
+    dtr = m.resolved_dt_rank(d)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    a_init = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dt),
+        "conv_w": (jax.random.normal(ks[1], (m.d_conv, di)) * (m.d_conv**-0.5)).astype(dt),
+        "x_proj": dense_init(ks[2], di, dtr + 2 * ds, dt),
+        "dt_proj": dense_init(ks[3], dtr, di, dt, scale=dtr**-0.5),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01))).astype(jnp.float32),  # softplus^-1(0.01)
+        "A_log": jnp.log(a_init),  # fp32 — recurrence numerics
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, dt, scale=(di * 2 * cfg.n_layers) ** -0.5),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, init_state: jnp.ndarray | None = None):
+    """Depthwise causal conv along seq. x: (B,S,di); w: (K,di).
+
+    ``init_state``: (B, K-1, di) left context (decode carry); zeros for train.
+    Returns (y (B,S,di), new_state (B,K-1,di)).
+    """
+    B, S, di = x.shape
+    K = w.shape[0]
+    if init_state is None:
+        init_state = jnp.zeros((B, K - 1, di), x.dtype)
+    xp = jnp.concatenate([init_state, x], axis=1)  # (B, S+K-1, di)
+    y = sum(xp[:, j : j + S, :] * w[j].astype(x.dtype) for j in range(K))
+    return y, xp[:, -(K - 1) :, :] if K > 1 else jnp.zeros((B, 0, di), x.dtype)
+
+
+def _ssm_chunk(h0, A_bar, Bx, C):
+    """One chunk of the selective scan via associative_scan.
+
+    h0: (B, di, ds); A_bar, Bx: (B, T, di, ds); C: (B, T, ds).
+    Returns (y (B, T, di), h_end (B, di, ds)).
+    """
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    A_cum, h_in = jax.lax.associative_scan(combine, (A_bar, Bx), axis=1)
+    h = h_in + A_cum * h0[:, None]  # (B, T, di, ds)
+    y = jnp.einsum("btdn,btn->btd", h, C)
+    return y, h[:, -1]
+
+
+def mamba_train(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Full-sequence mamba mixer. x: (B, S, d) -> (B, S, d)."""
+    m = cfg.mamba
+    B, S, _ = x.shape
+    di, ds = m.d_inner, m.d_state
+    dtr = m.resolved_dt_rank(cfg.d_model)
+
+    xz = linear(x, p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, _ = _causal_conv(xs, p["conv_w"])
+    xs = jax.nn.silu(xs)
+
+    dbc = linear(xs, p["x_proj"])  # (B,S,dtr+2ds)
+    dt_in, Bc, Cc = jnp.split(dbc, [dtr, dtr + ds], axis=-1)
+    A = -jnp.exp(p["A_log"])  # (di, ds)
+
+    chunk = min(m.chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nchunks = S // chunk
+
+    def step(h, idx):
+        # slice in storage dtype, cast to fp32 per chunk: the full-sequence
+        # fp32 copies / fp32 scan outputs otherwise dominate HBM at d_inner=2d
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, idx * chunk, chunk, axis=1)  # noqa: E731
+        dt_c = jax.nn.softplus(
+            linear(sl(dt_in), p["dt_proj"]).astype(jnp.float32) + p["dt_bias"]
+        )  # (B,T,di) fp32
+        x_c = sl(xs).astype(jnp.float32)
+        B_c = sl(Bc).astype(jnp.float32)
+        C_c = sl(Cc).astype(jnp.float32)
+        A_bar = jnp.exp(dt_c[..., None] * A[None, None])  # (B,T,di,ds)
+        Bx = (dt_c * x_c)[..., None] * B_c[:, :, None, :]  # (B,T,di,ds)
+        y, h_end = _ssm_chunk(h, A_bar, Bx, C_c)
+        return h_end, y.astype(x.dtype)
+
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    # checkpoint: the (B, chunk, d_inner, d_state) discretized tensors are
+    # recomputed in the backward pass rather than saved per chunk.
+    _, ys = jax.lax.scan(jax.checkpoint(step), h0, jnp.arange(nchunks))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di)
+    y = y + xs * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return linear(y, p["out_proj"])
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=None) -> dict:
+    m = cfg.mamba
+    dt = dtype or cfg.dtype("compute")
+    return {
+        "conv": jnp.zeros((batch, m.d_conv - 1, m.d_inner), dt),
+        "ssm": jnp.zeros((batch, m.d_inner, m.d_state), jnp.float32),
+    }
+
+
+def mamba_decode(p: dict, x: jnp.ndarray, cache: dict, cfg: ModelConfig):
+    """Single-token step. x: (B, 1, d) -> (out (B,1,d), new cache)."""
+    m = cfg.mamba
+    ds = m.d_state
+    dtr = m.resolved_dt_rank(cfg.d_model)
+
+    xz = linear(x, p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, conv_state = _causal_conv(xs, p["conv_w"], init_state=cache["conv"].astype(xs.dtype))
+    xs = jax.nn.silu(xs)
+
+    dbc = linear(xs, p["x_proj"])
+    dt_in, Bc, Cc = jnp.split(dbc, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(linear(dt_in, p["dt_proj"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    dt1, xs1, B1, C1 = dt[:, 0], xs[:, 0].astype(jnp.float32), Bc[:, 0].astype(jnp.float32), Cc[:, 0].astype(jnp.float32)
+    A_bar = jnp.exp(dt1[..., None] * A[None])  # (B,di,ds)
+    Bx = (dt1 * xs1)[..., None] * B1[:, None, :]
+    h = A_bar * cache["ssm"] + Bx
+    y = jnp.einsum("bdn,bn->bd", h, C1) + xs1 * p["D"]
+    y = y[:, None].astype(x.dtype) * jax.nn.silu(z)
+    out = linear(y, p["out_proj"])
+    return out, {"conv": conv_state.astype(cache["conv"].dtype), "ssm": h}

@@ -1,0 +1,44 @@
+"""Dense MLP: gated (SwiGLU / GeGLU) or classic two-matrix FFN."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, linear
+
+__all__ = ["init_mlp", "mlp_apply"]
+
+
+def _act(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(kind)
+
+
+def init_mlp(key: jax.Array, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    dt = cfg.dtype("param")
+    if cfg.mlp_gated:
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "w_gate": dense_init(k1, cfg.d_model, d_ff, dt),
+            "w_up": dense_init(k2, cfg.d_model, d_ff, dt),
+            "w_down": dense_init(k3, d_ff, cfg.d_model, dt, scale=(d_ff * 2 * cfg.n_layers) ** -0.5),
+        }
+    k1, k2 = jax.random.split(key, 2)
+    return {
+        "w_up": dense_init(k1, cfg.d_model, d_ff, dt),
+        "w_down": dense_init(k2, d_ff, cfg.d_model, dt, scale=(d_ff * 2 * cfg.n_layers) ** -0.5),
+    }
+
+
+def mlp_apply(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if "w_gate" in p:
+        h = _act(linear(x, p["w_gate"]), cfg.activation) * linear(x, p["w_up"])
+    else:
+        h = _act(linear(x, p["w_up"]), cfg.activation)
+    return linear(h, p["w_down"])

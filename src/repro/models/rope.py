@@ -1,0 +1,33 @@
+"""Rotary position embeddings (RoPE), decode-friendly.
+
+``apply_rope`` takes explicit integer positions so the same code path serves
+training (positions = arange) and decode (positions = cache index).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["rope_freqs", "apply_rope"]
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape (head_dim/2,), float32."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotate ``x`` of shape (..., S, H, Dh) by ``positions`` of shape (..., S).
+
+    Uses the split-halves convention (x = [x1, x2]) — consistent everywhere in
+    this codebase including the flash-attention kernel's reference.
+    """
+    *_, seq, _, head_dim = x.shape
+    assert positions.shape[-1] == seq, (positions.shape, x.shape)
+    freqs = rope_freqs(head_dim, theta)  # (Dh/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

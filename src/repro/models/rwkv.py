@@ -1,0 +1,293 @@
+"""RWKV6 ("Finch") block: time-mix with data-dependent decay + channel-mix.
+
+Two recurrence implementations:
+
+* ``wkv_scan``    — sequential ``lax.scan`` over time. Oracle (and decode).
+* ``wkv_chunked`` — chunked parallel form: within a chunk, pairwise decay
+  ratios ``exp(L_{t-1} - L_s)`` (always <= 1, numerically safe) turn the
+  recurrence into a masked matmul; state is carried across chunks.  This is
+  the formulation the Pallas kernel (`repro.kernels.rwkv6_scan`) implements —
+  MXU-shaped (head_dim x head_dim tiles) instead of the CUDA token-serial
+  kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, layernorm, layernorm_init, linear
+
+__all__ = [
+    "init_rwkv",
+    "rwkv_train",
+    "rwkv_decode",
+    "init_rwkv_cache",
+    "wkv_scan",
+    "wkv_chunked",
+]
+
+
+def init_rwkv(key: jax.Array, cfg: ModelConfig) -> dict:
+    r = cfg.rwkv
+    assert r is not None
+    dt = cfg.dtype("param")
+    d = cfg.d_model
+    H = d // r.head_dim
+    ks = jax.random.split(key, 16)
+    p = {
+        # time-mix projections
+        "wr": dense_init(ks[0], d, d, dt),
+        "wk": dense_init(ks[1], d, d, dt),
+        "wv": dense_init(ks[2], d, d, dt),
+        "wg": dense_init(ks[3], d, d, dt),
+        "wo": dense_init(ks[4], d, d, dt, scale=(d * 2 * cfg.n_layers) ** -0.5),
+        # data-dependent token-shift (5 targets: w,k,v,r,g) — low-rank
+        "maa_x": jnp.zeros((d,), dt),
+        "maa_base": jnp.zeros((5, d), dt),
+        "maa_w1": dense_init(ks[5], d, 5 * r.mix_lora, dt, scale=1e-2),
+        "maa_w2": (jax.random.normal(ks[6], (5, r.mix_lora, d)) * 1e-2).astype(dt),
+        # data-dependent decay — low-rank
+        "decay_base": jnp.full((d,), -6.0, jnp.float32),
+        "decay_w1": dense_init(ks[7], d, r.decay_lora, dt, scale=1e-2),
+        "decay_w2": dense_init(ks[8], r.decay_lora, d, dt, scale=1e-2),
+        # per-channel bonus for current token
+        "u": (jax.random.normal(ks[9], (d,)) * 1e-2).astype(jnp.float32),
+        # group norm over heads after wkv
+        "ln_x_gain": jnp.ones((d,), jnp.float32),
+        "ln_x_bias": jnp.zeros((d,), jnp.float32),
+        # channel mix
+        "cm_maa_k": jnp.zeros((d,), dt),
+        "cm_maa_r": jnp.zeros((d,), dt),
+        "cm_key": dense_init(ks[10], d, cfg.d_ff, dt),
+        "cm_value": dense_init(ks[11], cfg.d_ff, d, dt, scale=(cfg.d_ff * 2 * cfg.n_layers) ** -0.5),
+        "cm_recept": dense_init(ks[12], d, d, dt),
+        # RWKV uses LayerNorm before each sub-block (carried inside the block
+        # because one 'layer' holds two sub-residuals).
+        "ln1": layernorm_init(d, dt),
+        "ln2": layernorm_init(d, dt),
+    }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# WKV recurrence
+# ---------------------------------------------------------------------------
+
+
+def wkv_scan(r, k, v, w, u, s0=None):
+    """Sequential oracle. r,k,v,w: (B,T,H,D); u: (H,D). fp32 in, fp32 out.
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T ;  y_t = r_t . (S_{t-1} + diag(u k_t)) v-form
+    Returns (y (B,T,H,D), s_end (B,H,D,D)).
+    """
+    B, T, H, D = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((B, H, D, D), jnp.float32)
+
+    def step(s, t):
+        rt, kt, vt, wt = r[:, t], k[:, t], v[:, t], w[:, t]  # (B,H,D)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,D,D)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s_new = wt[..., :, None] * s + kv
+        return s_new, y
+
+    s_end, ys = jax.lax.scan(step, s0, jnp.arange(T))
+    return jnp.moveaxis(ys, 0, 1), s_end
+
+
+def wkv_chunked(r, k, v, w, u, s0=None, chunk: int = 128):
+    """Chunked parallel form; numerically safe (all exps of non-positive values).
+
+    Within a chunk with cumulative log-decay L_t = sum_{i<=t} log w_i:
+      y_t = r_t . diag(e^{L_{t-1}}) S0
+          + sum_{s<t} (r_t . e^{L_{t-1}-L_s} k_s) v_s + (r_t . u k_t) v_t
+      S_end = diag(e^{L_{T-1}}) S0 + sum_s diag(e^{L_{T-1}-L_s}) k_s v_s^T
+    """
+    B, T, H, D = r.shape
+    chunk = min(chunk, T)
+    assert T % chunk == 0, (T, chunk)
+    n = T // chunk
+    if s0 is None:
+        s0 = jnp.zeros((B, H, D, D), jnp.float32)
+    logw = jnp.log(jnp.maximum(w, 1e-38))  # (B,T,H,D) <= 0
+
+    rc = r.reshape(B, n, chunk, H, D)
+    kc = k.reshape(B, n, chunk, H, D)
+    vc = v.reshape(B, n, chunk, H, D)
+    lw = logw.reshape(B, n, chunk, H, D)
+
+    def step(s, i):
+        ri, ki, vi, lwi = rc[:, i], kc[:, i], vc[:, i], lw[:, i]  # (B,T,H,D)
+        L = jnp.cumsum(lwi, axis=1)  # (B,T,H,D)
+        Lprev = L - lwi  # L_{t-1}
+        # state contribution: (r_t * e^{L_{t-1}}) . S0
+        r_dec = ri * jnp.exp(Lprev)
+        y_state = jnp.einsum("bthk,bhkv->bthv", r_dec, s)
+        # intra-chunk: scores[t,s] = sum_k r_t[k] e^{L_{t-1}[k]-L_s[k]} k_s[k]
+        # (strictly lower triangular) + diagonal bonus via u.
+        # Mid-chunk recentering keeps both exponents in [-chunk*4/2, chunk*4/2]
+        # (the model clamps per-token log-decay to >= -4), overflow-free for
+        # chunk <= 32 in fp32.
+        Lmid = L[:, T2 - 1 : T2] if (T2 := chunk // 2) else 0.0
+        q = ri * jnp.exp(Lprev - Lmid)  # decay-weighted queries
+        kk = ki * jnp.exp(Lmid - L)  # decay-unweighted keys
+        scores = jnp.einsum("bthk,bshk->bhts", q, kk)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        diag = jnp.einsum("bthk,bthk->bth", ri, u[None, None] * ki)
+        y_intra = jnp.einsum("bhts,bshv->bthv", scores, vi) + diag[..., None] * vi
+        # state update
+        Lend = L[:, -1]  # (B,H,D)
+        k_dec = ki * jnp.exp(Lend[:, None] - L)  # (B,T,H,D)
+        s_new = jnp.exp(Lend)[..., None] * s + jnp.einsum("bthk,bthv->bhkv", k_dec, vi)
+        return s_new, y_state + y_intra
+
+    # checkpoint: recompute per-chunk decay/score tensors in the backward.
+    s_end, ys = jax.lax.scan(jax.checkpoint(step), s0, jnp.arange(n))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, H, D)
+    return y, s_end
+
+
+# ---------------------------------------------------------------------------
+# Block forward
+# ---------------------------------------------------------------------------
+
+
+def _token_shift(x: jnp.ndarray, last: jnp.ndarray | None):
+    """x_prev: previous token's activations (zeros / cache at t=0)."""
+    B, T, d = x.shape
+    if last is None:
+        last = jnp.zeros((B, 1, d), x.dtype)
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, x_prev):
+    """RWKV6 data-dependent token-shift: returns (xw, xk, xv, xr, xg)."""
+    sx = x_prev - x
+    xxx = x + sx * p["maa_x"].astype(x.dtype)
+    lora = jnp.tanh(linear(xxx, p["maa_w1"]))  # (B,T,5*lo)
+    B, T, _ = lora.shape
+    lora = lora.reshape(B, T, 5, -1)
+    mixes = jnp.einsum("btfl,fld->btfd", lora, p["maa_w2"].astype(x.dtype))
+    outs = []
+    for f in range(5):
+        mu = p["maa_base"][f].astype(x.dtype) + mixes[:, :, f]
+        outs.append(x + sx * mu)
+    return outs  # order: w, k, v, r, g
+
+
+def _group_norm_heads(x: jnp.ndarray, gain, bias, H: int, eps: float = 64e-5):
+    """GroupNorm with H groups over the channel dim. x: (B,T,d)."""
+    B, T, d = x.shape
+    xg = x.reshape(B, T, H, d // H).astype(jnp.float32)
+    mu = xg.mean(-1, keepdims=True)
+    var = xg.var(-1, keepdims=True)
+    xn = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return (xn.reshape(B, T, d) * gain + bias).astype(x.dtype)
+
+
+def _time_mix(p, x, cfg: ModelConfig, last_x, s0, wkv_impl: str):
+    r_cfg = cfg.rwkv
+    B, T, d = x.shape
+    H = d // r_cfg.head_dim
+    D = r_cfg.head_dim
+    x_prev = _token_shift(x, last_x)
+    xw, xk, xv, xr, xg = _ddlerp(p, x, x_prev)
+    rr = linear(xr, p["wr"]).reshape(B, T, H, D).astype(jnp.float32)
+    kk = linear(xk, p["wk"]).reshape(B, T, H, D).astype(jnp.float32)
+    vv = linear(xv, p["wv"]).reshape(B, T, H, D).astype(jnp.float32)
+    g = jax.nn.silu(linear(xg, p["wg"]))
+    dec = p["decay_base"] + jnp.tanh(linear(xw, p["decay_w1"])).astype(jnp.float32) @ p[
+        "decay_w2"
+    ].astype(jnp.float32)
+    # Clamp per-token log-decay to >= -4 (w >= e^-4): contributions more than
+    # ~22 tokens apart at that decay are < 1e-38 (fp32 underflow) anyway, and
+    # the bound makes the chunked form (jnp and Pallas) overflow-free for
+    # chunks <= 32 after mid-chunk recentering. Mirrored in kernels/rwkv6_scan.
+    w = jnp.exp(-jnp.minimum(jnp.exp(dec), 4.0)).reshape(B, T, H, D)  # in [e^-4, 1)
+    u = p["u"].reshape(H, D)
+
+    if wkv_impl == "scan":
+        y, s_end = wkv_scan(rr, kk, vv, w, u, s0)
+    elif wkv_impl == "chunked":
+        y, s_end = wkv_chunked(rr, kk, vv, w, u, s0, chunk=r_cfg.chunk)
+    elif wkv_impl == "kernel":
+        from repro.kernels import ops as kops  # lazy
+
+        y, s_end = kops.rwkv6_scan(rr, kk, vv, w, u, s0, chunk=r_cfg.chunk)
+    else:
+        raise ValueError(wkv_impl)
+
+    y = _group_norm_heads(y.reshape(B, T, d).astype(x.dtype), p["ln_x_gain"], p["ln_x_bias"], H)
+    out = linear(y * g, p["wo"])
+    return out, x[:, -1:], s_end
+
+
+def _channel_mix(p, x, last_x):
+    x_prev = _token_shift(x, last_x)
+    sx = x_prev - x
+    xk = x + sx * p["cm_maa_k"].astype(x.dtype)
+    xr = x + sx * p["cm_maa_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(linear(xk, p["cm_key"])))
+    return jax.nn.sigmoid(linear(xr, p["cm_recept"])) * linear(k, p["cm_value"]), x[:, -1:]
+
+
+def rwkv_train(
+    p: dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    wkv_impl: str = "chunked",
+    h_sharding=None,
+):
+    """Full RWKV6 block (time-mix + channel-mix live in one 'layer').
+
+    Residuals are added here (unlike attention/mamba blocks where the
+    transformer adds them) because the block has two sub-residuals.
+    NOTE: caller must NOT wrap with another residual; `transformer.py` knows.
+
+    ``h_sharding``: activation layout of (B, S, d) with d *replicated* over
+    the TP axis.  Pinning each sub-block's input to it makes the token-shift
+    / ddlerp mixes local and the five projections column-parallel — one bf16
+    gather per sub-block instead of one fp32 gather per *consumer* (24x —
+    measured in EXPERIMENTS.md §Perf, hillclimb 3).
+    """
+
+    def pin(t):
+        return jax.lax.with_sharding_constraint(t, h_sharding) if h_sharding is not None else t
+
+    tm_out, _, _ = _time_mix(p, pin(layernorm(x, p["ln1"], cfg.norm_eps)), cfg, None, None, wkv_impl)
+    x = x + tm_out
+    cm_out, _ = _channel_mix(p, pin(layernorm(x, p["ln2"], cfg.norm_eps)), None)
+    return x + cm_out
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int, dtype=None) -> dict:
+    r = cfg.rwkv
+    dt = dtype or cfg.dtype("compute")
+    d = cfg.d_model
+    H = d // r.head_dim
+    return {
+        "tm_last": jnp.zeros((batch, 1, d), dt),
+        "cm_last": jnp.zeros((batch, 1, d), dt),
+        "state": jnp.zeros((batch, H, r.head_dim, r.head_dim), jnp.float32),
+    }
+
+
+def rwkv_decode(p: dict, x: jnp.ndarray, cache: dict, cfg: ModelConfig):
+    """Single-token step with carried state. x: (B,1,d)."""
+    x1 = layernorm(x, p["ln1"], cfg.norm_eps)
+    tm_out, tm_last, s_end = _time_mix(
+        p, x1, cfg, cache["tm_last"].astype(x.dtype), cache["state"], wkv_impl="scan"
+    )
+    x = x + tm_out
+    x2 = layernorm(x, p["ln2"], cfg.norm_eps)
+    cm_out, cm_last = _channel_mix(p, x2, cache["cm_last"].astype(x.dtype))
+    x = x + cm_out
+    new_cache = {
+        "tm_last": tm_last.astype(cache["tm_last"].dtype),
+        "cm_last": cm_last.astype(cache["cm_last"].dtype),
+        "state": s_end,
+    }
+    return x, new_cache

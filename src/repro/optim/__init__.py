@@ -1,0 +1,18 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.clipping import clip_by_global_norm, global_norm
+from repro.optim.schedule import constant, warmup_cosine, warmup_linear
+from repro.optim.sgd import SGDConfig, sgd_init, sgd_update
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "global_norm",
+    "constant",
+    "warmup_cosine",
+    "warmup_linear",
+    "SGDConfig",
+    "sgd_init",
+    "sgd_update",
+]

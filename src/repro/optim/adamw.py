@@ -1,0 +1,66 @@
+"""AdamW as pure pytree functions (no optax).
+
+Supports reduced-precision moments (``moment_dtype="bfloat16"``) — at 398B
+params the fp32 m/v pair alone is ~3.2 TB, so bf16 moments are the default
+for the large assigned archs (recorded in DESIGN.md memory plan).  Weight
+decay is applied only to >=2-D parameters (norm gains / biases exempt).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: str = "float32"
+
+
+def adamw_init(params: Any, cfg: AdamWConfig = AdamWConfig()) -> dict:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)  # noqa: E731
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    grads: Any,
+    state: dict,
+    params: Any,
+    lr: jnp.ndarray | float,
+    cfg: AdamWConfig = AdamWConfig(),
+) -> tuple[Any, dict]:
+    """One AdamW step. Returns (new_params, new_state). All math in fp32."""
+    count = state["count"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, mu, nu, p):
+        g32 = g.astype(jnp.float32)
+        mu32 = b1 * mu.astype(jnp.float32) + (1 - b1) * g32
+        nu32 = b2 * nu.astype(jnp.float32) + (1 - b2) * (g32 * g32)
+        step = (mu32 / c1) / (jnp.sqrt(nu32 / c2) + cfg.eps)
+        if cfg.weight_decay > 0.0 and p.ndim >= 2:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * step
+        return new_p.astype(p.dtype), mu32.astype(mu.dtype), nu32.astype(nu.dtype)
+
+    out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"mu": new_mu, "nu": new_nu, "count": count}

@@ -1,0 +1,32 @@
+"""Learning-rate schedules as step -> lr functions (jit-safe)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["constant", "warmup_cosine", "warmup_linear"]
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+    return fn
+
+
+def warmup_linear(peak_lr: float, warmup_steps: int, total_steps: int):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        return jnp.where(step < warmup_steps, warm, peak_lr * (1 - prog))
+
+    return fn

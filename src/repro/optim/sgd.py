@@ -1,0 +1,43 @@
+"""Momentum SGD — the paper's optimizer (lr=1e-2, weight_decay=1e-4)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SGDConfig", "sgd_init", "sgd_update"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDConfig:
+    momentum: float = 0.9
+    weight_decay: float = 1e-4
+    nesterov: bool = False
+
+
+def sgd_init(params: Any) -> dict:
+    return {"velocity": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+
+def sgd_update(
+    grads: Any,
+    state: dict,
+    params: Any,
+    lr: jnp.ndarray | float,
+    cfg: SGDConfig = SGDConfig(),
+) -> tuple[Any, dict]:
+    def upd(g, v, p):
+        g32 = g.astype(jnp.float32)
+        if cfg.weight_decay > 0.0 and p.ndim >= 2:
+            g32 = g32 + cfg.weight_decay * p.astype(jnp.float32)
+        v_new = cfg.momentum * v + g32
+        step = g32 + cfg.momentum * v_new if cfg.nesterov else v_new
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), v_new
+
+    out = jax.tree.map(upd, grads, state["velocity"], params)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"velocity": new_v}

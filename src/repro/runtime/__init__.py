@@ -1,0 +1,11 @@
+from repro.runtime.elastic import ElasticCoordinator, FailureDetector, RescalePlan
+from repro.runtime.monitor import MeasuredTimingSource, SimulatedTimingSource, StragglerMonitor
+
+__all__ = [
+    "ElasticCoordinator",
+    "FailureDetector",
+    "RescalePlan",
+    "MeasuredTimingSource",
+    "SimulatedTimingSource",
+    "StragglerMonitor",
+]

@@ -1,0 +1,103 @@
+"""Elastic scaling + failure handling on top of the allocation controller.
+
+The paper's fig. 11 (add a worker / replace a weak worker with a strong
+one) is a *manual* elasticity experiment; this module automates it:
+
+1. ``FailureDetector`` — heartbeat bookkeeping; a rank missing
+   ``patience`` consecutive heartbeats is declared dead.
+2. ``ElasticCoordinator`` — on membership change, builds a rescale plan:
+   * surviving workers keep their measured speeds (warm start),
+   * joiners start at the mean speed (one adaptation epoch fixes it),
+   * the controller's total C is preserved -> optimizer schedule unchanged,
+   * data sampler re-partitions the *next* epoch (no mid-epoch resharding —
+     the paper reallocates at epoch boundaries only).
+3. In-flight step loss on failure is bounded by the checkpoint period
+   (``CheckpointManager``); the coordinator reports the restore step.
+
+At real pod scale, "worker" = pod/slice (see DESIGN.md §3): a preempted
+slice is a remove, a restored one a join — same code path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.controller import AdaptiveAllocationController
+
+__all__ = ["FailureDetector", "RescalePlan", "ElasticCoordinator"]
+
+
+class FailureDetector:
+    def __init__(self, n_workers: int, patience: int = 3) -> None:
+        self.patience = patience
+        self._missed = np.zeros(n_workers, dtype=np.int64)
+        self._alive = np.ones(n_workers, dtype=bool)
+
+    def heartbeat(self, worker: int) -> None:
+        self._missed[worker] = 0
+
+    def tick(self) -> list[int]:
+        """Advance one heartbeat interval; returns newly-dead worker ids."""
+        self._missed[self._alive] += 1
+        newly_dead = np.where(self._alive & (self._missed >= self.patience))[0]
+        self._alive[newly_dead] = False
+        return [int(i) for i in newly_dead]
+
+    @property
+    def alive(self) -> np.ndarray:
+        return self._alive.copy()
+
+
+@dataclasses.dataclass(frozen=True)
+class RescalePlan:
+    survivors: list[int]  # old indices kept, in new order
+    n_new: int  # joiners appended at the end
+    allocation: np.ndarray  # warm-start allocation for the new membership
+    restore_step: int | None  # checkpoint step to resume from (None = continue)
+
+
+class ElasticCoordinator:
+    def __init__(self, controller: AdaptiveAllocationController) -> None:
+        self.controller = controller
+
+    def _speeds(self) -> np.ndarray | None:
+        log = self.controller.log
+        if len(log) == 0:
+            return None
+        return log[-1].speeds
+
+    def remove(self, dead: Sequence[int], restore_step: int | None = None) -> RescalePlan:
+        n_old = self.controller.config.n_workers
+        survivors = [i for i in range(n_old) if i not in set(dead)]
+        v = self._speeds()
+        carry = v[survivors] if v is not None else None
+        alloc = self.controller.resize(len(survivors), carry_speeds=carry)
+        return RescalePlan(survivors=survivors, n_new=0, allocation=alloc, restore_step=restore_step)
+
+    def add(self, n_new: int, est_speed: float | None = None) -> RescalePlan:
+        n_old = self.controller.config.n_workers
+        v = self._speeds()
+        if v is not None:
+            join_speed = est_speed if est_speed is not None else float(np.mean(v))
+            carry = np.concatenate([v, np.full(n_new, join_speed)])
+        else:
+            carry = None
+        alloc = self.controller.resize(n_old + n_new, carry_speeds=carry)
+        return RescalePlan(
+            survivors=list(range(n_old)), n_new=n_new, allocation=alloc, restore_step=None
+        )
+
+    def replace(self, index: int, est_speed: float | None = None) -> RescalePlan:
+        """Replace worker ``index`` (paper fig. 11 'weak -> strong' case)."""
+        n = self.controller.config.n_workers
+        v = self._speeds()
+        if v is not None:
+            carry = v.copy()
+            carry[index] = est_speed if est_speed is not None else float(np.mean(v))
+        else:
+            carry = None
+        alloc = self.controller.resize(n, carry_speeds=carry)
+        return RescalePlan(survivors=list(range(n)), n_new=0, allocation=alloc, restore_step=None)

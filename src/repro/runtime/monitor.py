@@ -1,0 +1,108 @@
+"""Per-worker timing collection + straggler detection.
+
+The adaptive controller needs one number per worker per epoch: gradient
+compute time ``t_s`` (paper Alg. 1 step 1).  This module defines the
+collection interface and two providers:
+
+* :class:`SimulatedTimingSource` — wraps a :class:`ClusterSpec` speed model
+  (CPU validation; deterministic).
+* :class:`MeasuredTimingSource` — wall-clock measurement hooks for real
+  deployments: per-rank device-time deltas (``block_until_ready`` fences
+  around the compute segment).  On a multi-controller TPU deployment each
+  host times its own ranks and the vectors are all-gathered host-side —
+  exactly the paper's "broadcast your own t_s" step.
+
+``StragglerMonitor`` adds the beyond-paper watchdog statistics: per-worker
+z-scores of recent compute times, persistent-straggler flags, and the
+imbalance signal the controller's reopen logic consumes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.hetero import ClusterSpec
+
+__all__ = ["SimulatedTimingSource", "MeasuredTimingSource", "StragglerMonitor"]
+
+
+class SimulatedTimingSource:
+    """t_s from a ClusterSpec speed model (validation mode)."""
+
+    def __init__(self, cluster: ClusterSpec, jitter: bool = True) -> None:
+        self.cluster = cluster
+        self.jitter = jitter
+
+    def epoch_times(self, alloc: Sequence[int], epoch: int) -> np.ndarray:
+        return self.cluster.compute_times(np.asarray(alloc), epoch, jitter=self.jitter)
+
+
+class MeasuredTimingSource:
+    """Wall-clock timing: call ``start()``/``stop(rank)`` around compute."""
+
+    def __init__(self, n_ranks: int) -> None:
+        self.n_ranks = n_ranks
+        self._start: float | None = None
+        self._acc = np.zeros(n_ranks)
+
+    def start(self) -> None:
+        self._start = time.perf_counter()
+
+    def stop(self, rank: int) -> None:
+        if self._start is None:
+            raise RuntimeError("stop() before start()")
+        self._acc[rank] += time.perf_counter() - self._start
+        self._start = None
+
+    def epoch_times(self, alloc: Sequence[int] | None = None, epoch: int | None = None) -> np.ndarray:
+        out = self._acc.copy()
+        self._acc[:] = 0.0
+        if np.any(out <= 0):
+            raise RuntimeError("epoch_times read before all ranks reported")
+        return out
+
+
+@dataclasses.dataclass
+class StragglerFlag:
+    worker: int
+    z_score: float
+    persistent: bool
+
+
+class StragglerMonitor:
+    """Rolling per-worker compute-time statistics."""
+
+    def __init__(self, n_workers: int, window: int = 8, z_threshold: float = 2.5) -> None:
+        self.n_workers = n_workers
+        self.window = window
+        self.z_threshold = z_threshold
+        self._hist: deque[np.ndarray] = deque(maxlen=window)
+
+    def observe(self, per_sample_time: Sequence[float]) -> list[StragglerFlag]:
+        """Feed normalized (per-microbatch) compute times; returns flags."""
+        t = np.asarray(per_sample_time, dtype=np.float64)
+        self._hist.append(t)
+        if len(self._hist) < 3:
+            return []
+        hist = np.stack(self._hist)  # (k, n)
+        mean = hist.mean()
+        std = max(hist.std(), 1e-12)
+        z = (t - mean) / std
+        flags = []
+        for i in range(self.n_workers):
+            if z[i] > self.z_threshold:
+                recent = hist[-3:, i]
+                persistent = bool(np.all((recent - mean) / std > self.z_threshold))
+                flags.append(StragglerFlag(worker=i, z_score=float(z[i]), persistent=persistent))
+        return flags
+
+    def imbalance(self) -> float:
+        if not self._hist:
+            return 0.0
+        t = self._hist[-1]
+        return float((t.max() - t.min()) / max(t.max(), 1e-12))

@@ -1,0 +1,6 @@
+"""Pytest config. NOTE: no XLA device-count flags here — smoke tests and
+benches must see 1 CPU device; multi-device tests spawn subprocesses."""
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration tests")

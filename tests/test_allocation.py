@@ -1,0 +1,181 @@
+"""Unit + property tests for the paper's allocation math (§III, Appendix A)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import allocation as al
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+n_workers = st.integers(min_value=1, max_value=16)
+
+
+@st.composite
+def alloc_problem(draw):
+    """(w, t_s) pair: positive integer allocation + positive compute times."""
+    n = draw(n_workers)
+    w = draw(
+        st.lists(st.integers(min_value=1, max_value=200), min_size=n, max_size=n)
+    )
+    t = draw(
+        st.lists(
+            st.floats(min_value=1e-3, max_value=1e3, allow_nan=False, allow_infinity=False),
+            min_size=n,
+            max_size=n,
+        )
+    )
+    return np.array(w, dtype=np.int64), np.array(t)
+
+
+# ---------------------------------------------------------------------------
+# largest-remainder rounding
+# ---------------------------------------------------------------------------
+
+
+@given(
+    st.lists(st.floats(min_value=0.0, max_value=1e4, allow_nan=False), min_size=1, max_size=32),
+    st.integers(min_value=0, max_value=4),
+)
+@settings(max_examples=200, deadline=None)
+def test_rounding_preserves_sum_and_floor(target, w_min):
+    n = len(target)
+    total = max(n * w_min, int(sum(target)) + 3)
+    out = al.largest_remainder_round(np.array(target), total, w_min=w_min)
+    assert out.sum() == total
+    assert np.all(out >= w_min)
+    assert out.dtype == np.int64
+
+
+def test_rounding_matches_target_when_integral():
+    out = al.largest_remainder_round(np.array([3.0, 5.0, 2.0]), 10)
+    assert out.tolist() == [3, 5, 2]
+
+
+def test_rounding_max_deviation_below_one():
+    # Hamilton rounding never moves an entry by >= 1 from its (feasible) target.
+    t = np.array([2.4, 3.4, 4.2])
+    out = al.largest_remainder_round(t, 10)
+    assert np.all(np.abs(out - t) < 1.0)
+
+
+def test_rounding_infeasible_raises():
+    with pytest.raises(ValueError):
+        al.largest_remainder_round(np.array([1.0, 1.0]), 1, w_min=1)
+
+
+# ---------------------------------------------------------------------------
+# static allocation (§III.A)
+# ---------------------------------------------------------------------------
+
+
+def test_equal_allocation_exact_split():
+    assert al.equal_allocation(4, 20).tolist() == [5, 5, 5, 5]
+
+
+def test_equal_allocation_remainder():
+    out = al.equal_allocation(3, 10)
+    assert out.sum() == 10 and out.max() - out.min() <= 1
+
+
+def test_static_allocation_paper_ratios():
+    # Paper fig. 6 groups on C=10: 5:5, 6:4, 3:7, 7:3
+    for ratio, expect in [((5, 5), [5, 5]), ((6, 4), [6, 4]), ((3, 7), [3, 7]), ((7, 3), [7, 3])]:
+        assert al.static_allocation(ratio, 10).tolist() == expect
+
+
+def test_static_allocation_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        al.static_allocation([1.0, 0.0], 10)
+
+
+# ---------------------------------------------------------------------------
+# eq. 10 closed form vs Appendix A linear solve
+# ---------------------------------------------------------------------------
+
+
+@given(alloc_problem())
+@settings(max_examples=200, deadline=None)
+def test_closed_form_equals_appendix_solve(problem):
+    """Paper's eq. 22 == eq. 10: u_i = C*v_i/sum(v) - w_i."""
+    w, t = problem
+    v = al.speeds(w, t)
+    u_solve = al.appendix_solve(w, v)
+    u_closed = al.closed_form_target(w, t) - w
+    np.testing.assert_allclose(u_solve, u_closed, rtol=1e-8, atol=1e-8)
+
+
+@given(alloc_problem())
+@settings(max_examples=200, deadline=None)
+def test_increments_sum_to_zero(problem):
+    """Paper eq. 5: sum(u) == 0 (batch size conservation)."""
+    w, t = problem
+    u = al.closed_form_target(w, t) - w
+    assert abs(u.sum()) < 1e-6 * max(1.0, w.sum())
+
+
+@given(alloc_problem())
+@settings(max_examples=200, deadline=None)
+def test_adaptive_update_invariants(problem):
+    w, t = problem
+    res = al.adaptive_update(w, t, w_min=1)
+    assert res.w.sum() == w.sum()  # eq. 4: C constant
+    assert res.u.sum() == 0  # eq. 5
+    assert np.all(res.w >= 1)
+    np.testing.assert_allclose(res.target.sum(), w.sum(), rtol=1e-9)
+
+
+def test_fixpoint_when_already_balanced():
+    """eq. 8: if t_s already equal, allocation must not move."""
+    w = np.array([10, 20, 30])
+    t = np.array([2.0, 2.0, 2.0])  # all equal wait -> balanced
+    res = al.adaptive_update(w, t)
+    assert res.w.tolist() == w.tolist()
+
+
+def test_update_equalizes_in_one_step_without_noise():
+    """With exact (noise-free) speeds, one eq. 10 step lands on proportional."""
+    # workers with speeds 1:2:3, equal initial allocation 10:10:10
+    w = np.array([10, 10, 10])
+    v = np.array([1.0, 2.0, 3.0])
+    t = w / v
+    res = al.adaptive_update(w, t)
+    np.testing.assert_allclose(res.target, 30 * v / v.sum())
+    # post-update compute times are (near-)equal
+    t_next = res.w / v
+    assert al.allocation_imbalance(res.w, v) < 0.15  # integer rounding slack
+    assert t_next.max() - t_next.min() <= 1.0 / v.min()
+
+
+@given(alloc_problem())
+@settings(max_examples=100, deadline=None)
+def test_update_never_increases_ideal_makespan(problem):
+    """eq. 6/7: the real-valued target always (weakly) improves makespan."""
+    w, t = problem
+    v = al.speeds(w, t)
+    target = al.closed_form_target(w, t)
+    assert al.makespan(target, v) <= al.makespan(w, v) + 1e-9
+
+
+def test_makespan_and_waiting_times():
+    w = np.array([2, 4])
+    v = np.array([1.0, 1.0])
+    assert al.makespan(w, v, t_allreduce=0.5) == pytest.approx(4.5)
+    np.testing.assert_allclose(al.waiting_times(w, v), [2.0, 0.0])
+    assert al.allocation_imbalance(w, v) == pytest.approx(0.5)
+
+
+def test_single_worker_is_identity():
+    res = al.adaptive_update(np.array([7]), np.array([3.3]))
+    assert res.w.tolist() == [7]
+    assert al.appendix_solve([7.0], [1.0]).tolist() == [0.0]
+
+
+def test_speeds_validation():
+    with pytest.raises(ValueError):
+        al.speeds([1, 2], [1.0, 0.0])
+    with pytest.raises(ValueError):
+        al.speeds([1, 2], [1.0])

@@ -1,0 +1,198 @@
+"""Controller (Algorithm 1) + simulator behaviour tests against paper claims."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AdaptiveAllocationController,
+    ClusterSpec,
+    CommModel,
+    ControllerConfig,
+    StragglerEvent,
+    WorkerSpeed,
+    simulate_adpsgd,
+    simulate_ps,
+    simulate_sync,
+)
+
+
+def _cluster(speeds, jitter=0.0, seed=0):
+    return ClusterSpec(
+        workers=[WorkerSpeed(name=f"w{i}", throughput=s, jitter=jitter) for i, s in enumerate(speeds)],
+        seed=seed,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Controller unit behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_controller_starts_equal_and_sums_to_C():
+    ctl = AdaptiveAllocationController(ControllerConfig(total=24, n_workers=3))
+    assert ctl.allocation.tolist() == [8, 8, 8]
+    assert ctl.allocation.sum() == 24
+
+
+def test_controller_converges_to_speed_ratio():
+    """Paper figs. 9-10: ratio stabilizes near v_i/sum(v) within ~5 epochs."""
+    speeds = np.array([1.0, 2.0, 3.0])
+    ctl = AdaptiveAllocationController(ControllerConfig(total=60, n_workers=3, ema_beta=0.0))
+    for _ in range(6):
+        t_s = ctl.allocation / speeds
+        ctl.observe(t_s)
+    np.testing.assert_allclose(ctl.allocation, [10, 20, 30], atol=1)
+    assert ctl.allocation.sum() == 60
+
+
+def test_controller_freezes_after_stabilization():
+    """Paper §III.B.3: re-distribution stops once the ratio stops moving."""
+    speeds = np.array([1.0, 4.0])
+    ctl = AdaptiveAllocationController(
+        ControllerConfig(total=50, n_workers=2, ema_beta=0.0, freeze_patience=2)
+    )
+    for _ in range(10):
+        ctl.observe(ctl.allocation / speeds)
+    assert ctl.frozen
+    np.testing.assert_allclose(ctl.allocation, [10, 40], atol=1)
+
+
+def test_controller_reopens_on_drift():
+    """Beyond-paper watchdog: a frozen allocation re-adapts after a regime change."""
+    ctl = AdaptiveAllocationController(
+        ControllerConfig(total=40, n_workers=2, ema_beta=0.0, reopen_patience=2)
+    )
+    fast = np.array([1.0, 1.0])
+    for _ in range(6):
+        ctl.observe(ctl.allocation / fast)
+    assert ctl.frozen
+    # worker 1 becomes 4x slower (e.g. co-tenant lands on it)
+    slow = np.array([1.0, 0.25])
+    for _ in range(2):
+        ctl.observe(ctl.allocation / slow)
+    assert not ctl.frozen
+    for _ in range(6):
+        ctl.observe(ctl.allocation / slow)
+    np.testing.assert_allclose(ctl.allocation, [32, 8], atol=2)
+
+
+def test_controller_rejects_bad_inputs():
+    ctl = AdaptiveAllocationController(ControllerConfig(total=10, n_workers=2))
+    with pytest.raises(ValueError):
+        ctl.observe([1.0])
+    with pytest.raises(ValueError):
+        ctl.observe([1.0, -1.0])
+    with pytest.raises(ValueError):
+        AdaptiveAllocationController(ControllerConfig(total=10, n_workers=2), [3, 3])
+
+
+def test_controller_resize_carries_speeds():
+    """Elastic resize (paper fig. 11 automated): joiner warm-started by speed."""
+    ctl = AdaptiveAllocationController(ControllerConfig(total=30, n_workers=2))
+    ctl.resize(3, carry_speeds=[1.0, 1.0, 2.0])
+    w = ctl.allocation
+    assert w.sum() == 30
+    assert w[2] > w[0]
+
+
+def test_controller_state_dict_roundtrip():
+    ctl = AdaptiveAllocationController(ControllerConfig(total=20, n_workers=2, ema_beta=0.3))
+    ctl.observe([1.0, 2.0])
+    ctl.observe([1.1, 1.9])
+    state = ctl.state_dict()
+    ctl2 = AdaptiveAllocationController.from_state_dict(state)
+    assert ctl2.allocation.tolist() == ctl.allocation.tolist()
+    assert ctl2.epoch == ctl.epoch
+    assert ctl2.frozen == ctl.frozen
+    # continues identically
+    a = ctl.observe([1.0, 2.0])
+    b = ctl2.observe([1.0, 2.0])
+    assert a.tolist() == b.tolist()
+
+
+# ---------------------------------------------------------------------------
+# Simulator: paper's headline numbers
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_beats_equal_20_to_40_percent():
+    """Paper abstract: adaptive cuts epoch time 'nearly one-third to half'
+    vs equal allocation once stabilized (V100 + 2080ti-class gap)."""
+    cluster = _cluster([2.10, 1.45, 1.0], jitter=0.0)  # v100, 2080ti, 1080ti
+    comm = CommModel(grad_bytes=50e6)
+    equal = simulate_sync(cluster, epochs=12, total_micro=30, comm=comm, policy="equal")
+    adapt = simulate_sync(cluster, epochs=12, total_micro=30, comm=comm, policy="adaptive")
+    # steady-state epoch time (last epoch, post-freeze)
+    gain = 1.0 - adapt.makespans[-1] / equal.makespans[-1]
+    assert 0.20 <= gain <= 0.55, gain
+
+
+def test_adaptive_ratio_stabilizes_within_5_epochs():
+    """Paper fig. 9: ratio steady after ~4 epochs."""
+    cluster = _cluster([2.10, 1.45], jitter=0.02)
+    log = simulate_sync(cluster, epochs=10, total_micro=20, policy="adaptive")
+    allocs = log.allocations
+    # after epoch 5 the allocation changes by at most 1 microbatch per worker
+    late = allocs[5:]
+    assert np.all(np.abs(np.diff(late, axis=0)) <= 1)
+
+
+def test_static_matching_ratio_beats_equal():
+    """Paper figs. 7-8: the right static ratio beats 5:5 on unequal hardware."""
+    cluster = _cluster([2.0, 1.0], jitter=0.0)
+    comm = CommModel(grad_bytes=50e6)
+    equal = simulate_sync(cluster, epochs=3, total_micro=30, comm=comm, policy="equal")
+    good = simulate_sync(
+        cluster, epochs=3, total_micro=30, comm=comm, policy="static", static_ratios=[2, 1]
+    )
+    bad = simulate_sync(
+        cluster, epochs=3, total_micro=30, comm=comm, policy="static", static_ratios=[1, 2]
+    )
+    assert good.total_time() < equal.total_time() < bad.total_time()
+
+
+def test_add_worker_reduces_time():
+    """Paper fig. 11: adding a card reduces epoch time under adaptive allocation."""
+    base = _cluster([2.10, 1.45])
+    bigger = base.with_added(WorkerSpeed(name="extra", throughput=1.45))
+    t1 = simulate_sync(base, epochs=8, total_micro=40, policy="adaptive").makespans[-1]
+    t2 = simulate_sync(bigger, epochs=8, total_micro=40, policy="adaptive").makespans[-1]
+    assert t2 < t1
+
+
+def test_replace_weak_with_strong_reduces_time():
+    base = _cluster([1.0, 1.45])
+    upgraded = base.with_replaced(0, WorkerSpeed(name="v100", throughput=2.10))
+    t1 = simulate_sync(base, epochs=8, total_micro=40, policy="adaptive").makespans[-1]
+    t2 = simulate_sync(upgraded, epochs=8, total_micro=40, policy="adaptive").makespans[-1]
+    assert t2 < t1
+
+
+def test_allocation_beats_ps_and_allreduce_with_straggler():
+    """Paper fig. 13 shape: allocation >> PS; > AllReduce, with a 2x straggler."""
+    cluster = _cluster([1.0, 1.0, 1.0, 0.5])  # one 2x straggler
+    comm = CommModel(grad_bytes=100e6)
+    C, epochs = 40, 10
+    adapt = simulate_sync(cluster, epochs, C, comm, policy="adaptive").total_time()
+    equal = simulate_sync(cluster, epochs, C, comm, policy="equal").total_time()
+    ps = simulate_ps(cluster, epochs, C, comm).total_time()
+    assert adapt < equal < ps
+
+
+def test_adpsgd_two_workers_degenerates():
+    """Paper fig. 12 observation: with 2 workers AD-PSGD ~= AllReduce speed
+    (pairwise averaging couples both workers), so adaptive allocation wins."""
+    cluster = _cluster([2.0, 1.0], jitter=0.0)
+    comm = CommModel(grad_bytes=50e6)
+    C = 30
+    target = C * 10
+    ad = simulate_adpsgd(cluster, target_samples=target, comm=comm)
+    adapt = simulate_sync(cluster, epochs=10, total_micro=C, comm=comm, policy="adaptive")
+    assert adapt.total_time() < ad["wall_clock_s"]
+
+
+def test_straggler_event_transient():
+    w = WorkerSpeed(name="x", throughput=2.0, events=[StragglerEvent(2, 4, 0.5)])
+    assert w.mean_speed(1) == pytest.approx(2.0)
+    assert w.mean_speed(2) == pytest.approx(1.0)
+    assert w.mean_speed(4) == pytest.approx(2.0)

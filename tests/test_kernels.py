@@ -1,0 +1,126 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ops import weighted_accum, weighted_accum_tree
+from repro.kernels.ref import flash_attention_ref, rwkv6_scan_ref, weighted_accum_ref
+from repro.kernels.rwkv6_scan import rwkv6_scan
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # B, Sq, Sk, H, Hkv, Dh, causal, window, softcap, q_offset, bq, bk
+    (2, 128, 128, 4, 2, 64, True, None, 0.0, 0, 64, 64),
+    (1, 256, 256, 8, 8, 128, True, None, 0.0, 0, 128, 128),
+    (2, 128, 128, 4, 1, 64, True, 32, 0.0, 0, 32, 32),  # MQA + sliding window
+    (1, 64, 64, 4, 2, 64, False, None, 50.0, 0, 32, 32),  # softcap, non-causal
+    (1, 8, 128, 4, 2, 64, True, None, 0.0, 120, 8, 64),  # decode-style offset
+    (2, 64, 64, 2, 2, 256, True, None, 0.0, 0, 64, 64),  # gemma head_dim 256
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_matches_ref_fp32(case):
+    B, Sq, Sk, H, Hkv, Dh, causal, window, softcap, qoff, bq, bk = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, Dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Sk, Hkv, Dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Sk, Hkv, Dh), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, window=window, softcap=softcap,
+                          q_offset=qoff, block_q=bq, block_kv=bk)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window, softcap=softcap, q_offset=qoff)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 64), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 128, 2, 64), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 128, 2, 64), jnp.bfloat16)
+    out = flash_attention(q, k, v, block_q=64, block_kv=64)
+    ref = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=3e-2, atol=3e-2
+    )
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 chunked scan
+# ---------------------------------------------------------------------------
+
+RWKV_CASES = [
+    # B, T, H, D, chunk, w_min
+    (2, 64, 2, 16, 32, 0.5),
+    (1, 96, 4, 64, 32, 0.02),
+    (2, 32, 2, 32, 16, np.exp(-4.0)),  # clamp boundary decay
+    (1, 64, 1, 128, 32, 0.2),
+]
+
+
+@pytest.mark.parametrize("case", RWKV_CASES)
+def test_rwkv6_scan_matches_ref(case):
+    B, T, H, D, chunk, wmin = case
+    ks = jax.random.split(KEY, 6)
+    r = jax.random.normal(ks[0], (B, T, H, D))
+    k = jax.random.normal(ks[1], (B, T, H, D))
+    v = jax.random.normal(ks[2], (B, T, H, D))
+    w = wmin + (0.999 - wmin) * jax.random.uniform(ks[3], (B, T, H, D))
+    u = jax.random.normal(ks[4], (H, D)) * 0.1
+    s0 = jax.random.normal(ks[5], (B, H, D, D)) * 0.1
+    y, s = rwkv6_scan(r, k, v, w, u, s0, chunk=chunk)
+    y_ref, s_ref = rwkv6_scan_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), rtol=3e-4, atol=3e-4)
+
+
+def test_rwkv6_state_carry_composes():
+    """Running two halves with carried state == running the whole sequence."""
+    B, T, H, D = 1, 64, 2, 16
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (B, T, H, D))
+    k = jax.random.normal(ks[1], (B, T, H, D))
+    v = jax.random.normal(ks[2], (B, T, H, D))
+    w = 0.3 + 0.69 * jax.random.uniform(ks[3], (B, T, H, D))
+    u = jax.random.normal(ks[4], (H, D)) * 0.1
+    y_full, s_full = rwkv6_scan(r, k, v, w, u, chunk=16)
+    h = T // 2
+    y1, s1 = rwkv6_scan(r[:, :h], k[:, :h], v[:, :h], w[:, :h], u, chunk=16)
+    y2, s2 = rwkv6_scan(r[:, h:], k[:, h:], v[:, h:], w[:, h:], u, s1, chunk=16)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)), np.asarray(y_full), rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# weighted accumulation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "shape,dtype",
+    [((1000,), jnp.float32), ((33, 77), jnp.float32), ((8, 128), jnp.bfloat16), ((5, 3, 7), jnp.float32)],
+)
+def test_weighted_accum_matches_ref(shape, dtype):
+    a = jax.random.normal(KEY, shape).astype(dtype)
+    g = jax.random.normal(jax.random.PRNGKey(1), shape).astype(dtype)
+    out = weighted_accum(a, g, 0.37)
+    ref = weighted_accum_ref(a, g, jnp.float32(0.37))
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_weighted_accum_tree():
+    tree_a = {"x": jnp.ones((64,)), "y": {"z": jnp.zeros((4, 4))}}
+    tree_g = {"x": jnp.full((64,), 2.0), "y": {"z": jnp.ones((4, 4))}}
+    out = weighted_accum_tree(tree_a, tree_g, 0.5)
+    np.testing.assert_allclose(np.asarray(out["x"]), 2.0)
+    np.testing.assert_allclose(np.asarray(out["y"]["z"]), 0.5)

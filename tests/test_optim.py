@@ -1,0 +1,92 @@
+"""Optimizer + schedule tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (
+    AdamWConfig,
+    SGDConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    constant,
+    global_norm,
+    sgd_init,
+    sgd_update,
+    warmup_cosine,
+    warmup_linear,
+)
+
+
+def _quadratic_params():
+    return {"w": jnp.array([3.0, -2.0]), "norm_gain": jnp.array([0.5])}
+
+
+def test_adamw_converges_on_quadratic():
+    p = _quadratic_params()
+    cfg = AdamWConfig(weight_decay=0.0)
+    state = adamw_init(p, cfg)
+    loss = lambda p: jnp.sum(p["w"] ** 2) + jnp.sum(p["norm_gain"] ** 2)  # noqa: E731
+    for _ in range(300):
+        g = jax.grad(loss)(p)
+        p, state = adamw_update(g, state, p, 0.05, cfg)
+    assert loss(p) < 1e-3
+
+
+def test_adamw_weight_decay_only_on_matrices():
+    p = {"w": jnp.ones((2, 2)), "gain": jnp.ones((2,))}
+    cfg = AdamWConfig(weight_decay=0.5)
+    state = adamw_init(p, cfg)
+    zero_g = jax.tree.map(jnp.zeros_like, p)
+    p2, _ = adamw_update(zero_g, state, p, 0.1, cfg)
+    assert float(p2["w"][0, 0]) < 1.0  # decayed
+    np.testing.assert_allclose(np.asarray(p2["gain"]), 1.0)  # 1-D exempt
+
+
+def test_adamw_bf16_moments_track_fp32():
+    p = {"w": jnp.ones((64,))}
+    c32 = AdamWConfig(moment_dtype="float32", weight_decay=0.0)
+    c16 = AdamWConfig(moment_dtype="bfloat16", weight_decay=0.0)
+    s32, s16 = adamw_init(p, c32), adamw_init(p, c16)
+    p32 = p16 = p
+    g = {"w": jnp.full((64,), 0.3)}
+    for _ in range(20):
+        p32, s32 = adamw_update(g, s32, p32, 0.01, c32)
+        p16, s16 = adamw_update(g, s16, p16, 0.01, c16)
+    np.testing.assert_allclose(np.asarray(p32["w"]), np.asarray(p16["w"]), rtol=2e-2)
+    assert s16["mu"]["w"].dtype == jnp.bfloat16
+
+
+def test_sgd_momentum_matches_reference():
+    cfg = SGDConfig(momentum=0.9, weight_decay=0.0)
+    p = {"w": jnp.array([1.0])}
+    s = sgd_init(p)
+    g = {"w": jnp.array([1.0])}
+    v_ref, w_ref = 0.0, 1.0
+    for _ in range(5):
+        p, s = sgd_update(g, s, p, 0.1, cfg)
+        v_ref = 0.9 * v_ref + 1.0
+        w_ref -= 0.1 * v_ref
+    np.testing.assert_allclose(float(p["w"][0]), w_ref, rtol=1e-6)
+
+
+def test_clipping():
+    g = {"a": jnp.array([3.0, 4.0])}  # norm 5
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(norm), 5.0)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-6)
+    # below threshold: untouched
+    clipped2, _ = clip_by_global_norm(g, 10.0)
+    np.testing.assert_allclose(np.asarray(clipped2["a"]), np.asarray(g["a"]))
+
+
+@pytest.mark.parametrize("sched", ["cosine", "linear"])
+def test_schedules_shape(sched):
+    fn = (warmup_cosine if sched == "cosine" else warmup_linear)(1.0, 10, 100)
+    assert float(fn(0)) == 0.0
+    np.testing.assert_allclose(float(fn(10)), 1.0, rtol=1e-5)
+    assert float(fn(50)) < 1.0
+    assert float(fn(100)) <= float(fn(50))
+    assert float(constant(0.3)(1234)) == pytest.approx(0.3)

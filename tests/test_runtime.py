@@ -1,0 +1,86 @@
+"""Runtime: straggler monitor, failure detection, elastic coordination."""
+
+import numpy as np
+import pytest
+
+from repro.core import AdaptiveAllocationController, ControllerConfig
+from repro.runtime import (
+    ElasticCoordinator,
+    FailureDetector,
+    MeasuredTimingSource,
+    SimulatedTimingSource,
+    StragglerMonitor,
+)
+from repro.core.hetero import ClusterSpec, WorkerSpeed
+
+
+def test_failure_detector_lifecycle():
+    fd = FailureDetector(3, patience=2)
+    assert fd.tick() == []  # missed 1
+    fd.heartbeat(0)
+    fd.heartbeat(1)
+    dead = fd.tick()  # worker 2 missed 2
+    assert dead == [2]
+    assert fd.alive.tolist() == [True, True, False]
+    # dead workers are not re-reported
+    assert fd.tick() != [2] or 2 not in fd.tick()
+
+
+def test_straggler_monitor_flags_persistent():
+    mon = StragglerMonitor(4, window=8, z_threshold=2.0)
+    flags = []
+    for i in range(6):
+        t = np.array([1.0, 1.0, 1.0, 1.0 if i < 3 else 5.0])
+        flags = mon.observe(t)
+    assert flags and flags[0].worker == 3
+    assert flags[0].persistent
+    assert mon.imbalance() > 0.5
+
+
+def test_elastic_remove_rebalances_with_carried_speeds():
+    ctl = AdaptiveAllocationController(ControllerConfig(total=40, n_workers=4, ema_beta=0.0))
+    speeds = np.array([1.0, 1.0, 2.0, 4.0])
+    for _ in range(6):
+        ctl.observe(ctl.allocation / speeds)
+    coord = ElasticCoordinator(ctl)
+    plan = coord.remove([0], restore_step=100)
+    assert plan.survivors == [1, 2, 3]
+    assert plan.allocation.sum() == 40
+    assert plan.restore_step == 100
+    # survivors keep proportionality ~1:2:4
+    r = plan.allocation / plan.allocation.sum()
+    np.testing.assert_allclose(r, [1 / 7, 2 / 7, 4 / 7], atol=0.06)
+
+
+def test_elastic_add_and_replace():
+    ctl = AdaptiveAllocationController(ControllerConfig(total=30, n_workers=2, ema_beta=0.0))
+    speeds = np.array([1.0, 2.0])
+    for _ in range(5):
+        ctl.observe(ctl.allocation / speeds)
+    coord = ElasticCoordinator(ctl)
+    plan = coord.add(1, est_speed=4.0)  # paper fig.11: add a strong card
+    assert plan.allocation.shape == (3,)
+    assert plan.allocation[2] > plan.allocation[0]
+    # replace the weak worker with a stronger one
+    ctl2 = AdaptiveAllocationController(ControllerConfig(total=30, n_workers=2, ema_beta=0.0))
+    for _ in range(5):
+        ctl2.observe(ctl2.allocation / speeds)
+    plan2 = ElasticCoordinator(ctl2).replace(0, est_speed=4.0)
+    assert plan2.allocation[0] > plan2.allocation[1] * 0.9
+
+
+def test_timing_sources():
+    cluster = ClusterSpec(workers=[WorkerSpeed("a", 2.0), WorkerSpeed("b", 1.0)])
+    sim = SimulatedTimingSource(cluster, jitter=False)
+    t = sim.epoch_times([4, 4], epoch=0)
+    np.testing.assert_allclose(t, [2.0, 4.0])
+
+    m = MeasuredTimingSource(2)
+    m.start()
+    m.stop(0)
+    m.start()
+    m.stop(1)
+    out = m.epoch_times()
+    assert out.shape == (2,) and np.all(out > 0)
+    with pytest.raises(RuntimeError):
+        m.stop(0)  # stop without start
