@@ -1,0 +1,32 @@
+"""``repro.dist`` — the heterogeneous-allocation distribution layer.
+
+* :mod:`repro.dist.hetero_step` — the per-rank variable-microbatch train
+  step (the paper's core mechanism).
+* :mod:`repro.dist.collectives` — ring allreduce + error-feedback gradient
+  compression.
+* :mod:`repro.dist.sharding` — divisibility-aware PartitionSpec assignment.
+* :mod:`repro.dist.compat` — jax cross-version shims (shard_map, make_mesh).
+"""
+
+from repro.dist.collectives import (
+    compress_error_feedback,
+    decompress_update,
+    init_error_state,
+    ring_allreduce,
+    ring_allreduce_tree,
+)
+from repro.dist.hetero_step import HeteroStepConfig, build_train_step, init_train_state
+from repro.dist.sharding import cache_specs, param_specs
+
+__all__ = [
+    "HeteroStepConfig",
+    "build_train_step",
+    "init_train_state",
+    "ring_allreduce",
+    "ring_allreduce_tree",
+    "init_error_state",
+    "compress_error_feedback",
+    "decompress_update",
+    "param_specs",
+    "cache_specs",
+]

@@ -1,0 +1,154 @@
+"""Collectives for heterogeneous data parallelism.
+
+Two independent pieces, both paper-adjacent:
+
+* :func:`ring_allreduce` — the classic bandwidth-optimal ring (reduce-scatter
+  then all-gather over ``ppermute``), numerically interchangeable with
+  ``lax.psum``.  The paper's allocation plug-in leaves Ring AllReduce itself
+  untouched; having our own ring lets the roofline bench count the 2(n-1)/n
+  traffic explicitly and lets the hetero step swap ``psum`` for a ring
+  without changing semantics (``HeteroStepConfig.collective="ring"``).
+* error-feedback gradient compression (:func:`init_error_state`,
+  :func:`compress_error_feedback`, :func:`decompress_update`) — the
+  compressed-collective idea from *Distributed Optimization using
+  Heterogeneous Compute Systems*: quantize (and optionally sparsify) the
+  update actually sent, carry the quantization residual into the next step
+  so the *accumulated* sent stream converges to the accumulated truth.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ring_allreduce",
+    "ring_allreduce_tree",
+    "init_error_state",
+    "compress_error_feedback",
+    "decompress_update",
+]
+
+
+# ---------------------------------------------------------------------------
+# ring allreduce
+# ---------------------------------------------------------------------------
+
+
+def ring_allreduce(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Bandwidth-optimal ring allreduce of ``x`` over mesh axis ``axis_name``.
+
+    Must be called inside ``shard_map`` (manual mode over ``axis_name``).
+    Matches ``lax.psum(x, axis_name)`` up to fp32 summation order.  Handles
+    sizes not divisible by the ring length by zero-padding the flat buffer.
+    """
+    n = jax.lax.psum(1, axis_name)  # static ring length
+    if n == 1:
+        return x
+    idx = jax.lax.axis_index(axis_name)
+    shape, size, dtype = x.shape, x.size, x.dtype
+    chunk = -(-size // n)
+    flat = jnp.pad(x.reshape(-1).astype(jnp.float32), (0, chunk * n - size))
+    chunks = flat.reshape(n, chunk)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    # reduce-scatter: after n-1 rotations rank i owns the full sum of
+    # chunk (i+1) mod n
+    def rs_step(k, ch):
+        send = jax.lax.dynamic_index_in_dim(ch, (idx - k) % n, 0, keepdims=False)
+        recv = jax.lax.ppermute(send, axis_name, perm)
+        return ch.at[(idx - k - 1) % n].add(recv, mode="promise_in_bounds")
+
+    chunks = jax.lax.fori_loop(0, n - 1, rs_step, chunks)
+
+    # all-gather: circulate the completed chunks
+    def ag_step(k, ch):
+        send = jax.lax.dynamic_index_in_dim(ch, (idx + 1 - k) % n, 0, keepdims=False)
+        recv = jax.lax.ppermute(send, axis_name, perm)
+        return ch.at[(idx - k) % n].set(recv, mode="promise_in_bounds")
+
+    chunks = jax.lax.fori_loop(0, n - 1, ag_step, chunks)
+    return chunks.reshape(-1)[:size].reshape(shape).astype(dtype)
+
+
+def ring_allreduce_tree(tree: Any, axis_name: str) -> Any:
+    """Ring-allreduce every leaf of a pytree (one ring per leaf)."""
+    return jax.tree.map(lambda x: ring_allreduce(x, axis_name), tree)
+
+
+# ---------------------------------------------------------------------------
+# error-feedback gradient compression
+# ---------------------------------------------------------------------------
+#
+# A compressed leaf is a plain dict {"values", "indices", "shape"} so it
+# flattens/serializes without custom pytree registrations; ``indices`` is
+# None for dense quantization and an int array for top-k sparsification.
+
+
+def _is_compressed_leaf(x: Any) -> bool:
+    return isinstance(x, dict) and "values" in x and "shape" in x
+
+
+def init_error_state(grads: Any) -> Any:
+    """Zero residuals, one fp32 buffer per gradient leaf."""
+    return jax.tree.map(lambda g: jnp.zeros(jnp.shape(g), jnp.float32), grads)
+
+
+def compress_error_feedback(
+    grads: Any,
+    error: Any,
+    *,
+    dtype: str = "bfloat16",
+    ratio: float | None = None,
+) -> tuple[Any, Any]:
+    """Compress ``grads + error`` and return ``(compressed, new_error)``.
+
+    Default is dense ``dtype`` quantization (bf16 halves collective bytes);
+    ``ratio`` additionally keeps only the top ``ratio`` fraction of entries
+    by magnitude per leaf.  The residual ``new_error`` is what the
+    compressor dropped this step; feeding it back keeps the *cumulative*
+    transmitted update unbiased (sum of sends = sum of true grads - final
+    residual, and the residual stays bounded by one quantization step).
+    """
+    send_dtype = jnp.dtype(dtype)
+
+    def compress_one(g: jnp.ndarray, e: jnp.ndarray):
+        corrected = g.astype(jnp.float32) + e
+        if ratio is None:
+            values = corrected.astype(send_dtype)
+            leaf = {"values": values, "indices": None, "shape": tuple(corrected.shape)}
+            decoded = values.astype(jnp.float32)
+        else:
+            k = max(1, int(ratio * corrected.size))
+            flat = corrected.reshape(-1)
+            _, indices = jax.lax.top_k(jnp.abs(flat), k)
+            values = flat[indices].astype(send_dtype)
+            leaf = {"values": values, "indices": indices, "shape": tuple(corrected.shape)}
+            decoded = (
+                jnp.zeros_like(flat).at[indices].set(values.astype(jnp.float32)).reshape(corrected.shape)
+            )
+        return leaf, corrected - decoded
+
+    g_leaves, treedef = jax.tree.flatten(grads)
+    e_leaves = jax.tree.leaves(error)
+    pairs = [compress_one(g, e) for g, e in zip(g_leaves, e_leaves)]
+    compressed = jax.tree.unflatten(treedef, [p[0] for p in pairs])
+    new_error = jax.tree.unflatten(treedef, [p[1] for p in pairs])
+    return compressed, new_error
+
+
+def decompress_update(compressed: Any) -> Any:
+    """Reconstruct the dense fp32 update tree from compressed leaves."""
+
+    def decode(leaf: dict) -> jnp.ndarray:
+        values = jnp.asarray(leaf["values"]).astype(jnp.float32)
+        if leaf["indices"] is None:
+            return values.reshape(leaf["shape"])
+        size = 1
+        for d in leaf["shape"]:
+            size *= d
+        return jnp.zeros((size,), jnp.float32).at[leaf["indices"]].set(values).reshape(leaf["shape"])
+
+    return jax.tree.map(decode, compressed, is_leaf=_is_compressed_leaf)

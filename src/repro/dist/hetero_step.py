@@ -1,0 +1,289 @@
+"""The paper's heterogeneous train step: per-rank variable microbatch counts.
+
+One SPMD step consumes rank-major padded buffers
+
+    inputs/targets: (R, W_max, micro_bs, seq)   alloc: (R,) int32
+
+where rank *r* trains on its first ``alloc[r]`` microbatches and the rest is
+padding.  Two numerically identical executions of the same math:
+
+* ``mode="while"`` — a ``shard_map`` manual region over the allocation axis;
+  each rank runs a ``lax.while_loop`` with ITS OWN trip count (the fast path:
+  a rank allocated 2 microbatches does 2 forward/backwards, not W_max), then
+  the partial (grad_sum, loss_sum, token_sum) are reduced across ranks with
+  ``psum`` or our :func:`~repro.dist.collectives.ring_allreduce`.
+* ``mode="masked"`` — plain GSPMD arithmetic masking: scan over the W_max
+  slots, vmap over ranks, weight each slot by ``1[j < alloc[r]]``.  Runs
+  anywhere (including 1 device) and stays legal when parameters are sharded
+  over the allocation axis (FSDP), where while-mode is forbidden — see
+  :meth:`HeteroStepConfig.validate`.
+
+Both normalize the summed gradient by the GLOBAL token count, so the update
+depends only on the union of microbatches, not on which rank computed which
+(the paper's eq. 1 allocation-invariance: reallocating work between ranks
+never changes the training trajectory).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import compat
+from repro.dist.collectives import ring_allreduce_tree
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.optim import (
+    AdamWConfig,
+    SGDConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    constant,
+    global_norm,
+    sgd_init,
+    sgd_update,
+)
+
+__all__ = ["HeteroStepConfig", "init_train_state", "build_train_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HeteroStepConfig:
+    """Static configuration of the allocation-aware step."""
+
+    w_max: int  # per-rank buffer depth (max microbatches any rank may get)
+    micro_bs: int  # sequences per microbatch
+    seq_len: int
+    mode: str = "masked"  # "while" | "masked"
+    alloc_axis: str = "data"  # mesh axis the allocation ranks live on
+    fsdp: bool = False  # params sharded over fsdp_axes (ZeRO-3)
+    fsdp_axes: tuple[str, ...] = ("data",)
+    optimizer: str = "adamw"  # "adamw" | "sgd"
+    grad_dtype: str = "float32"  # accumulation dtype
+    collective: str = "psum"  # "psum" | "ring" (while-mode gradient reduce)
+    lr: float = 1e-3  # default when no lr_fn is passed
+    clip_norm: float = 0.0  # 0 = no clipping
+
+    def __post_init__(self) -> None:
+        if self.mode not in ("while", "masked"):
+            raise ValueError(f"mode must be 'while' or 'masked', got {self.mode!r}")
+        if self.optimizer not in ("adamw", "sgd"):
+            raise ValueError(f"optimizer must be 'adamw' or 'sgd', got {self.optimizer!r}")
+        if self.collective not in ("psum", "ring"):
+            raise ValueError(f"collective must be 'psum' or 'ring', got {self.collective!r}")
+        if self.w_max < 1 or self.micro_bs < 1 or self.seq_len < 1:
+            raise ValueError("w_max, micro_bs and seq_len must all be >= 1")
+
+    def validate(self, mesh) -> "HeteroStepConfig":
+        """Check legality against a mesh.  The load-bearing invariant: in
+        while-mode, ranks execute DIFFERENT trip counts, so any collective
+        inside the loop body is executed a different number of times per
+        rank.  FSDP over the allocation axis puts parameter all-gathers
+        inside every microbatch's forward — ranks with small allocations
+        would stop participating while big ranks still wait on them: a
+        deadlock on real hardware.  Masked mode (same trip count everywhere,
+        masked arithmetic) is the legal way to combine the two."""
+        axis_names = tuple(mesh.axis_names)
+        if self.alloc_axis not in axis_names:
+            raise ValueError(f"alloc_axis {self.alloc_axis!r} not in mesh axes {axis_names}")
+        if self.mode == "while" and self.fsdp and self.alloc_axis in self.fsdp_axes:
+            raise ValueError(
+                f"while-mode with FSDP over the allocation axis {self.alloc_axis!r} would "
+                "deadlock: per-rank trip counts diverge but FSDP all-gathers inside the "
+                "loop body are collective over that axis. Use mode='masked' (or move FSDP "
+                "off the allocation axis)."
+            )
+        return self
+
+
+def _micro_loss_sum(params, inputs, targets, cfg: ModelConfig, scfg: HeteroStepConfig):
+    """Summed (not averaged) loss of ONE microbatch.
+
+    Returns ``(loss_sum, token_count)``; dividing accumulated ``loss_sum``
+    by accumulated ``token_count`` AFTER the cross-rank reduction is what
+    makes the update allocation-invariant (per-microbatch averaging would
+    weight ranks by their allocation).  MoE auxiliary losses are folded in
+    per token so they renormalize identically.
+    """
+    del scfg  # static shapes already baked into the batch
+    loss, aux = transformer.loss_fn(params, {"inputs": inputs, "targets": targets}, cfg)
+    tokens = aux["tokens"]
+    return loss * tokens, tokens
+
+
+def init_train_state(
+    cfg: ModelConfig,
+    scfg: HeteroStepConfig,
+    key: jax.Array,
+    opt_cfg: AdamWConfig | SGDConfig | None = None,
+) -> dict:
+    """``{"params", "opt", "step"}`` — the pytree every launcher checkpoints."""
+    params = transformer.init_params(cfg, key)
+    if scfg.optimizer == "adamw":
+        opt = adamw_init(params, opt_cfg or AdamWConfig())
+    else:
+        opt = sgd_init(params)
+    return {"params": params, "opt": opt, "step": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# gradient accumulation bodies
+# ---------------------------------------------------------------------------
+
+
+def _grad_fn(cfg: ModelConfig, scfg: HeteroStepConfig):
+    def f(params, x, y):
+        return _micro_loss_sum(params, x, y, cfg, scfg)
+
+    return jax.value_and_grad(f, has_aux=True)
+
+
+def _zero_carry(params, grad_dtype):
+    gz = jax.tree.map(lambda p: jnp.zeros(p.shape, grad_dtype), params)
+    return gz, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)
+
+
+def _masked_grads(params, inputs, targets, alloc, cfg, scfg):
+    """Scan the W_max slots; vmap ranks; mask pays w_max trips everywhere."""
+    grad_fn = _grad_fn(cfg, scfg)
+    gdt = jnp.dtype(scfg.grad_dtype)
+    W = inputs.shape[1]
+    mask = (jnp.arange(W)[None, :] < alloc[:, None]).astype(jnp.float32)  # (R, W)
+    vgrad = jax.vmap(grad_fn, in_axes=(None, 0, 0))
+
+    def slot(carry, xs):
+        gsum, lsum, tsum = carry
+        x, y, m = xs  # x/y: (R, mb, S); m: (R,)
+        (ls, tk), g = vgrad(params, x, y)
+        gsum = jax.tree.map(lambda a, b: a + jnp.tensordot(m, b.astype(jnp.float32), axes=1).astype(a.dtype), gsum, g)
+        return (gsum, lsum + (m * ls).sum(), tsum + (m * tk).sum()), None
+
+    xs = (inputs.transpose(1, 0, 2, 3), targets.transpose(1, 0, 2, 3), mask.T)
+    (gsum, lsum, tsum), _ = jax.lax.scan(slot, _zero_carry(params, gdt), xs)
+    return gsum, lsum, tsum
+
+
+def _while_grads(params, inputs, targets, alloc, cfg, scfg):
+    """Manual-mode body: per-local-rank while loops with dynamic trip counts.
+
+    Runs inside shard_map over ``scfg.alloc_axis``; ``inputs`` is the local
+    (R_local, W, mb, S) block.  Each rank does exactly ``alloc[r]`` grads.
+    """
+    grad_fn = _grad_fn(cfg, scfg)
+    gdt = jnp.dtype(scfg.grad_dtype)
+    R_local, W = inputs.shape[:2]
+    alloc = jnp.minimum(alloc, W)
+    carry = _zero_carry(params, gdt)
+    for r in range(R_local):  # static local-rank unroll (R_local is tiny)
+        x_r, y_r, w_r = inputs[r], targets[r], alloc[r]
+
+        def cond(c):
+            return c[0] < w_r  # noqa: B023 — rebuilt per unrolled iteration
+
+        def body(c):
+            j, gsum, lsum, tsum = c
+            (ls, tk), g = grad_fn(params, x_r[j], y_r[j])  # noqa: B023
+            gsum = jax.tree.map(lambda a, b: a + b.astype(a.dtype), gsum, g)
+            return j + 1, gsum, lsum + ls, tsum + tk
+
+        init = (jnp.zeros((), jnp.int32),) + carry
+        carry = jax.lax.while_loop(cond, body, init)[1:]
+    gsum, lsum, tsum = carry
+    # cross-rank reduction: the ONLY collective in the step — the paper's
+    # plug-in point.  Scalars always ride psum; the gradient tree may take
+    # the explicit ring.
+    ax = scfg.alloc_axis
+    if scfg.collective == "ring":
+        gsum = ring_allreduce_tree(gsum, ax)
+    else:
+        gsum = jax.lax.psum(gsum, ax)
+    lsum = jax.lax.psum(lsum, ax)
+    tsum = jax.lax.psum(tsum, ax)
+    return gsum, lsum, tsum
+
+
+# ---------------------------------------------------------------------------
+# the step
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    scfg: HeteroStepConfig,
+    mesh,
+    lr_fn=None,
+    opt_cfg: AdamWConfig | SGDConfig | None = None,
+    jit: bool = True,
+):
+    """Build ``step(state, batch) -> (state, metrics)``.
+
+    ``batch``: ``{"inputs": (R, W, mb, S), "targets": ..., "alloc": (R,)}``.
+    ``metrics``: ``{"loss", "tokens", "grad_norm", "lr"}`` scalars; ``loss``
+    is the global token-weighted mean cross-entropy BEFORE the update.
+    ``jit=False`` returns the raw callable for callers that jit with
+    explicit in/out shardings (dryrun, serving planners).
+    """
+    scfg.validate(mesh)
+    lr_fn = lr_fn or constant(scfg.lr)
+    if scfg.optimizer == "adamw":
+        ocfg = opt_cfg or AdamWConfig()
+        opt_update = lambda g, o, p, lr: adamw_update(g, o, p, lr, ocfg)  # noqa: E731
+    else:
+        ocfg = opt_cfg or SGDConfig()
+        opt_update = lambda g, o, p, lr: sgd_update(g, o, p, lr, ocfg)  # noqa: E731
+
+    n_rank_shards = int(dict(mesh.shape)[scfg.alloc_axis])
+
+    def global_grads(params, inputs, targets, alloc):
+        if scfg.mode == "masked":
+            return _masked_grads(params, inputs, targets, alloc, cfg, scfg)
+        if inputs.shape[0] % n_rank_shards:
+            raise ValueError(
+                f"while-mode batch has R={inputs.shape[0]} rank rows, not divisible by "
+                f"mesh axis {scfg.alloc_axis!r} of size {n_rank_shards}"
+            )
+        # Fully-manual region (every mesh axis): partial-auto shard_map trips
+        # the XLA SPMD partitioner CHECK (spmd_partitioner.cc:512) on the
+        # transformer's gather/scan patterns — same limitation DESIGN.md §5
+        # records for the multi-pod cells.  Params enter replicated (P()), so
+        # non-allocation shards redundantly compute identical grads; the
+        # psum/ring runs over the allocation axis only.
+        ax = scfg.alloc_axis
+        body = compat.shard_map(
+            lambda p, x, y, a: _while_grads(p, x, y, a, cfg, scfg),
+            mesh,
+            in_specs=(P(), P(ax, None, None, None), P(ax, None, None, None), P(ax)),
+            out_specs=(P(), P(), P()),
+            check_rep=False,
+        )
+        return body(params, inputs, targets, alloc)
+
+    def step(state, batch):
+        inputs = batch["inputs"]
+        targets = batch["targets"]
+        alloc = batch["alloc"].astype(jnp.int32)
+        gsum, lsum, tsum = global_grads(state["params"], inputs, targets, alloc)
+        denom = jnp.maximum(tsum, 1.0)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) / denom, gsum)
+        if scfg.clip_norm > 0.0:
+            grads, gnorm = clip_by_global_norm(grads, scfg.clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        lr = lr_fn(state["step"])
+        params, opt = opt_update(grads, state["opt"], state["params"], lr)
+        new_state = {"params": params, "opt": opt, "step": state["step"] + 1}
+        metrics = {
+            "loss": lsum / denom,
+            "tokens": tsum,
+            "grad_norm": gnorm,
+            "lr": jnp.asarray(lr, jnp.float32),
+        }
+        return new_state, metrics
+
+    if jit:
+        return jax.jit(step, donate_argnums=(0,))
+    return step

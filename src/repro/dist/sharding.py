@@ -1,0 +1,126 @@
+"""PartitionSpec assignment for params and decode caches.
+
+Specs are assigned by parameter *path* (key names in ``models/layers.py``
+are part of this contract) with a hard divisibility gate: a dim is only
+ever sharded when the mesh axis size divides it exactly — smollm's 15 query
+heads, 5 KV heads, odd vocab sizes etc. silently fall back to replicated
+instead of tripping the GSPMD partitioner.
+
+Layout rules (megatron-style pairing so each matmul needs one collective):
+
+* column-parallel (``wq``/``wk``/``wv``/``w_gate``/``w_up`` and experts):
+  output dim over ``model``.
+* row-parallel (``wo``/``w_down``/``out_proj``/``value``): input dim over
+  ``model``.
+* ``embed`` is vocab-parallel (dim 0 over ``model``); ``lm_head`` is
+  column-parallel.
+* FSDP (``fsdp=True``): the matmul dim NOT taken by ``model`` is sharded
+  over ``fsdp_axes`` (ZeRO-3 weight sharding).
+* leading stacking dims (scan-over-layers pytrees) are never sharded.
+* 0/1-D leaves (norm gains, biases, scalars) are replicated.
+
+Only ``mesh.shape`` (name -> size mapping) and ``mesh.axis_names`` are read,
+so abstract stand-in meshes work too.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["param_specs", "cache_specs"]
+
+# weights whose INPUT dim is the big contracted one (row-parallel)
+_ROW_PARALLEL = {"wo", "w_down", "out_proj", "value"}
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for entry in path:
+        key = getattr(entry, "key", None)
+        if key is None:
+            key = getattr(entry, "idx", None)
+        names.append(str(key))
+    return names
+
+
+def _axis_sizes(mesh) -> dict[str, int]:
+    return {name: int(size) for name, size in dict(mesh.shape).items()}
+
+
+def _axes_entry(axes: tuple[str, ...]):
+    return axes[0] if len(axes) == 1 else axes
+
+
+def param_specs(
+    params: Any,
+    mesh,
+    fsdp: bool = False,
+    fsdp_axes: tuple[str, ...] = ("data",),
+) -> Any:
+    """PartitionSpec tree matching ``params`` leaf-for-leaf."""
+    sizes = _axis_sizes(mesh)
+    model = sizes.get("model", 1)
+    fsdp_axes = tuple(a for a in fsdp_axes if a in sizes)
+    fsdp_size = 1
+    for a in fsdp_axes:
+        fsdp_size *= sizes[a]
+    fsdp_entry = _axes_entry(fsdp_axes) if fsdp_axes else None
+
+    def spec_for(path, leaf) -> P:
+        if leaf.ndim < 2:
+            return P()
+        name = _path_names(path)[-1]
+        spec: list = [None] * leaf.ndim
+        # the trailing two dims are the matmul (in, out); anything in front
+        # is layer stacking and stays unsharded
+        d_in, d_out = leaf.ndim - 2, leaf.ndim - 1
+        if name == "embed":
+            model_dim, fsdp_dim = d_in, d_out  # vocab-parallel
+        elif name in _ROW_PARALLEL:
+            model_dim, fsdp_dim = d_in, d_out
+        else:
+            model_dim, fsdp_dim = d_out, d_in
+        if model > 1 and leaf.shape[model_dim] % model == 0:
+            spec[model_dim] = "model"
+        if fsdp and fsdp_entry is not None and fsdp_size > 1 and leaf.shape[fsdp_dim] % fsdp_size == 0:
+            spec[fsdp_dim] = fsdp_entry
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def cache_specs(cache: Any, mesh, dp_axes: tuple[str, ...] = ("data",)) -> Any:
+    """Specs for a decode cache from ``transformer.init_cache``.
+
+    Batch dim over ``dp_axes`` (dim 1 under the stacked ``body`` subtree,
+    dim 0 elsewhere); KV head dims over ``model``; position/index tracking
+    replicated.  Same divisibility gate as :func:`param_specs`.
+    """
+    sizes = _axis_sizes(mesh)
+    model = sizes.get("model", 1)
+    dp_axes = tuple(a for a in dp_axes if a in sizes)
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= sizes[a]
+    dp_entry = _axes_entry(dp_axes) if dp_axes else None
+
+    def spec_for(path, leaf) -> P:
+        names = _path_names(path)
+        name = names[-1]
+        if leaf.ndim == 0 or name in ("index", "pos"):
+            return P(*([None] * leaf.ndim))
+        spec: list = [None] * leaf.ndim
+        batch_dim = 1 if "body" in names else 0  # body caches are layer-stacked
+        if dp_entry is not None and dp_size > 1 and batch_dim < leaf.ndim and leaf.shape[batch_dim] % dp_size == 0:
+            spec[batch_dim] = dp_entry
+        if model > 1:
+            if name in ("k", "v") and leaf.ndim >= batch_dim + 3 and leaf.shape[-2] % model == 0:
+                spec[-2] = "model"  # (.., S, Hkv, Dh): heads
+            elif name in ("k_scale", "v_scale") and leaf.ndim >= batch_dim + 2 and leaf.shape[-1] % model == 0:
+                spec[-1] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)

@@ -158,6 +158,8 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, hetero: bool) -> 
         compiled = lowered.compile()
         ma = compiled.memory_analysis()
         ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):  # jax<=0.4.x: list of per-device dicts
+            ca = ca[0] if ca else {}
         hlo = compiled.as_text()
         colls = collective_stats(hlo)
         per_dev_bytes = ma.argument_size_in_bytes + ma.temp_size_in_bytes + ma.output_size_in_bytes

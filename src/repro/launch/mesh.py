@@ -13,8 +13,7 @@ legality invariant in dist/hetero_step.py.
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.dist.compat import make_mesh
 
 __all__ = ["make_production_mesh", "make_test_mesh", "HW"]
 
@@ -22,12 +21,13 @@ __all__ = ["make_production_mesh", "make_test_mesh", "HW"]
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(4, 2), axes=("data", "model")):
-    """Small mesh for multi-device tests (requires host-device override)."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    """Small mesh for multi-device tests (requires host-device override).
+    Uses a prefix subset when the host has more devices than the mesh."""
+    return make_mesh(shape, axes)
 
 
 class HW:

@@ -1,9 +1,13 @@
 """Data pipeline tests: proportional sampler invariants (hypothesis) + batcher."""
 
 import numpy as np
-import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest  # noqa: F401 — used by the hypothesis fallback path
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # unit tests still run; @given tests skip
+    from _hypothesis_stub import given, settings, st
 
 from repro.data import HeteroBatcher, ProportionalSampler, SyntheticImages, SyntheticLM
 

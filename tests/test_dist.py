@@ -44,9 +44,9 @@ def test_while_equals_masked_equals_reference():
         from repro.models import ModelConfig
         from repro.dist import HeteroStepConfig, build_train_step, init_train_state
         from repro.dist.hetero_step import _micro_loss_sum
+        from repro.launch.mesh import make_test_mesh
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_test_mesh((4, 2), ("data", "model"))
         cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
                           n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=101,
                           compute_dtype="float32", remat=False)
@@ -88,9 +88,9 @@ def test_allocation_invariance_of_update():
         import jax, jax.numpy as jnp, numpy as np
         from repro.models import ModelConfig
         from repro.dist import HeteroStepConfig, build_train_step, init_train_state
+        from repro.launch.mesh import make_test_mesh
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_test_mesh((4, 2), ("data", "model"))
         cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
                           n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=101,
                           compute_dtype="float32", remat=False)
@@ -134,12 +134,14 @@ def test_ring_allreduce_equals_psum():
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
         from repro.dist import ring_allreduce
-        mesh = jax.make_mesh((8,), ("w",), axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.dist.compat import shard_map
+        from repro.launch.mesh import make_test_mesh
+        mesh = make_test_mesh((8,), ("w",))
         x = jax.random.normal(jax.random.PRNGKey(0), (8, 16, 3))
         def f(x):
             local = x[0]
             return (ring_allreduce(local, "w") - jax.lax.psum(local, "w"))[None]
-        g = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("w"), out_specs=P("w"), check_vma=False))
+        g = jax.jit(shard_map(f, mesh, in_specs=P("w"), out_specs=P("w"), check_rep=False))
         assert float(jnp.abs(g(x)).max()) < 1e-5
         print("OK")
         """
@@ -157,8 +159,8 @@ def test_while_mode_fsdp_over_alloc_axis_rejected():
         """
         import jax, pytest
         from repro.dist import HeteroStepConfig
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_test_mesh
+        mesh = make_test_mesh((4, 2), ("data", "model"))
         scfg = HeteroStepConfig(w_max=2, micro_bs=2, seq_len=8, mode="while",
                                 alloc_axis="data", fsdp=True)
         try:
