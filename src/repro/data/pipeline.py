@@ -42,7 +42,13 @@ class HeteroBatcher:
         self.sampler = ProportionalSampler(len(dataset), micro_batch, seed=seed)
 
     def epoch(self, epoch: int, alloc: np.ndarray) -> Iterator[dict[str, np.ndarray]]:
-        """Yield one dict per aggregation (global step)."""
+        """Yield one dict per aggregation (global step).
+
+        The final aggregation of an epoch may be PARTIAL (the sampler splits
+        the dataset tail proportionally rather than dropping it), so each
+        yielded ``alloc`` is derived from that aggregation's actual shares —
+        a rank may even get 0 microbatches in the last step of an epoch.
+        """
         alloc = np.asarray(alloc, dtype=np.int32)
         if alloc.max() > self.w_max:
             raise ValueError(f"allocation {alloc.max()} exceeds W_max={self.w_max}")
@@ -52,13 +58,15 @@ class HeteroBatcher:
         for a in range(n_agg):
             inputs = np.zeros((self.n_ranks, self.w_max, self.micro_batch, S), np.int32)
             targets = np.zeros_like(inputs)
+            alloc_a = np.array([len(plan[i][a]) // self.micro_batch for i in range(self.n_ranks)], np.int32)
             for i in range(self.n_ranks):
-                idx = plan[i][a]
-                b = self.dataset.batch(idx)
-                k = alloc[i] * self.micro_batch
-                inputs[i, : alloc[i]] = b["inputs"][:k].reshape(alloc[i], self.micro_batch, S)
-                targets[i, : alloc[i]] = b["targets"][:k].reshape(alloc[i], self.micro_batch, S)
-            yield {"inputs": inputs, "targets": targets, "alloc": alloc.copy()}
+                w = alloc_a[i]
+                if w == 0:
+                    continue
+                b = self.dataset.batch(plan[i][a])
+                inputs[i, :w] = b["inputs"].reshape(w, self.micro_batch, S)
+                targets[i, :w] = b["targets"].reshape(w, self.micro_batch, S)
+            yield {"inputs": inputs, "targets": targets, "alloc": alloc_a}
 
     def aggregations_per_epoch(self, alloc: np.ndarray) -> int:
         return self.sampler.aggregations_per_epoch(alloc)

@@ -9,14 +9,18 @@
 """
 
 from repro.dist.collectives import (
+    all_gather_params,
     compress_error_feedback,
     decompress_update,
     init_error_state,
+    reduce_scatter_tree,
+    ring_all_gather,
     ring_allreduce,
     ring_allreduce_tree,
+    ring_reduce_scatter,
 )
 from repro.dist.hetero_step import HeteroStepConfig, build_train_step, init_train_state
-from repro.dist.sharding import cache_specs, param_specs
+from repro.dist.sharding import cache_specs, param_specs, state_specs
 
 __all__ = [
     "HeteroStepConfig",
@@ -24,9 +28,14 @@ __all__ = [
     "init_train_state",
     "ring_allreduce",
     "ring_allreduce_tree",
+    "ring_all_gather",
+    "ring_reduce_scatter",
+    "all_gather_params",
+    "reduce_scatter_tree",
     "init_error_state",
     "compress_error_feedback",
     "decompress_update",
     "param_specs",
+    "state_specs",
     "cache_specs",
 ]

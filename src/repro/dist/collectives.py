@@ -1,6 +1,6 @@
 """Collectives for heterogeneous data parallelism.
 
-Two independent pieces, both paper-adjacent:
+Three independent pieces, all paper-adjacent:
 
 * :func:`ring_allreduce` — the classic bandwidth-optimal ring (reduce-scatter
   then all-gather over ``ppermute``), numerically interchangeable with
@@ -8,6 +8,14 @@ Two independent pieces, both paper-adjacent:
   untouched; having our own ring lets the roofline bench count the 2(n-1)/n
   traffic explicitly and lets the hetero step swap ``psum`` for a ring
   without changing semantics (``HeteroStepConfig.collective="ring"``).
+* the gathered-FSDP pair (:func:`all_gather_params`,
+  :func:`reduce_scatter_tree`, plus the :func:`ring_all_gather` /
+  :func:`ring_reduce_scatter` single-ring primitives) — ZeRO-style state
+  sharding with exactly ONE gather and ONE reduce-scatter per step, driven
+  by the same PartitionSpecs the persistent state is stored under.  Because
+  the collective count per step is uniform across ranks, these compose with
+  while-mode's divergent per-rank trip counts where per-microbatch FSDP
+  gathers would deadlock (see ``HeteroStepConfig.validate``).
 * error-feedback gradient compression (:func:`init_error_state`,
   :func:`compress_error_feedback`, :func:`decompress_update`) — the
   compressed-collective idea from *Distributed Optimization using
@@ -18,14 +26,19 @@ Two independent pieces, both paper-adjacent:
 
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec
 
 __all__ = [
     "ring_allreduce",
     "ring_allreduce_tree",
+    "ring_all_gather",
+    "ring_reduce_scatter",
+    "all_gather_params",
+    "reduce_scatter_tree",
     "init_error_state",
     "compress_error_feedback",
     "decompress_update",
@@ -76,6 +89,135 @@ def ring_allreduce(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
 def ring_allreduce_tree(tree: Any, axis_name: str) -> Any:
     """Ring-allreduce every leaf of a pytree (one ring per leaf)."""
     return jax.tree.map(lambda x: ring_allreduce(x, axis_name), tree)
+
+
+def ring_all_gather(x: jnp.ndarray, axis_name: str, dim: int = 0) -> jnp.ndarray:
+    """Ring all-gather: concatenate every rank's ``x`` along ``dim``.
+
+    ``ppermute``-based equivalent of ``lax.all_gather(x, axis_name,
+    axis=dim, tiled=True)``: n-1 neighbour exchanges, each of the local
+    shard size.  Must run inside ``shard_map`` manual over ``axis_name``.
+    """
+    n = jax.lax.psum(1, axis_name)  # static ring length
+    if n == 1:
+        return x
+    idx = jax.lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    buf = jnp.zeros((n,) + x.shape, x.dtype)
+    buf = buf.at[idx].set(x, mode="promise_in_bounds")
+    cur = x
+    for k in range(n - 1):  # pass along the chunk received last step
+        cur = jax.lax.ppermute(cur, axis_name, perm)
+        buf = buf.at[(idx - k - 1) % n].set(cur, mode="promise_in_bounds")
+    # buf[j] is rank j's shard; splice the leading ring dim into `dim`
+    return jnp.concatenate([buf[j] for j in range(n)], axis=dim)
+
+
+def ring_reduce_scatter(x: jnp.ndarray, axis_name: str, dim: int = 0) -> jnp.ndarray:
+    """Ring reduce-scatter: rank *i* gets chunk *i* (along ``dim``) of the sum.
+
+    Equivalent of ``lax.psum_scatter(x, axis_name, scatter_dimension=dim,
+    tiled=True)``; requires ``x.shape[dim]`` divisible by the ring length
+    (the sharding rules' divisibility gate guarantees this for param/grad
+    trees).  Accumulates in the input dtype, like ``psum_scatter``.
+    """
+    n = jax.lax.psum(1, axis_name)
+    if n == 1:
+        return x
+    if x.shape[dim] % n:
+        raise ValueError(f"dim {dim} of {x.shape} not divisible by ring length {n}")
+    idx = jax.lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    chunks = jnp.stack(jnp.split(x, n, axis=dim))  # (n, ..., chunk, ...)
+
+    # after n-1 rotations rank i holds the full sum of chunk i (the -1 offset
+    # relative to ring_allreduce's reduce-scatter phase lands the completed
+    # chunk on its owner without a final shift)
+    def rs_step(k, ch):
+        send = jax.lax.dynamic_index_in_dim(ch, (idx - k - 1) % n, 0, keepdims=False)
+        recv = jax.lax.ppermute(send, axis_name, perm)
+        return ch.at[(idx - k - 2) % n].add(recv, mode="promise_in_bounds")
+
+    chunks = jax.lax.fori_loop(0, n - 1, rs_step, chunks)
+    return jax.lax.dynamic_index_in_dim(chunks, idx, 0, keepdims=False)
+
+
+# ---------------------------------------------------------------------------
+# gathered-FSDP tree collectives (spec-driven)
+# ---------------------------------------------------------------------------
+
+
+def _spec_dims(spec: PartitionSpec, ndim: int) -> list[tuple[int, tuple[str, ...]]]:
+    """``[(dim, axis_names)]`` for every sharded dim of a leaf's spec."""
+    out = []
+    for dim, entry in enumerate(tuple(spec)[:ndim]):
+        if entry is None:
+            continue
+        out.append((dim, entry if isinstance(entry, tuple) else (entry,)))
+    return out
+
+
+def all_gather_params(tree: Any, specs: Any, *, use_ring: bool = False) -> Any:
+    """Reconstruct full leaves from shards laid out per ``specs``.
+
+    One (ring) all-gather per sharded dim per mesh axis, inner mesh axis
+    first so tiled concatenation rebuilds the PartitionSpec's major-to-minor
+    shard order.  Must run inside a ``shard_map`` manual over every axis
+    named in ``specs``; leaves with ``P()`` pass through untouched.
+    """
+
+    def gather_leaf(x, spec):
+        for dim, axes in _spec_dims(spec, x.ndim):
+            for ax in reversed(axes):  # minor axis first
+                if use_ring:
+                    x = ring_all_gather(x, ax, dim)
+                else:
+                    x = jax.lax.all_gather(x, ax, axis=dim, tiled=True)
+        return x
+
+    return jax.tree.map(gather_leaf, tree, specs)
+
+
+def reduce_scatter_tree(
+    tree: Any,
+    specs: Any,
+    reduce_axes: Sequence[str],
+    *,
+    use_ring: bool = False,
+) -> Any:
+    """Sum a replicated-input tree over ``reduce_axes`` and scatter each leaf
+    back to its ``specs`` shard.
+
+    The input convention matches while-mode gradient accumulation: each
+    device holds a tree that is PARTIAL over ``reduce_axes`` (per-rank
+    gradient sums) and identical across every other mesh axis.  Per leaf:
+
+    * a sharded dim over a reduce axis -> (ring) reduce-scatter;
+    * a sharded dim over a non-reduce axis -> slice the local chunk (the
+      values are already identical there, summing would overcount);
+    * reduce axes that shard no dim of the leaf -> plain ``psum``.
+    """
+
+    def scatter_leaf(g, spec):
+        remaining = list(reduce_axes)
+        for dim, axes in _spec_dims(spec, g.ndim):
+            for ax in axes:  # major axis first
+                if ax in remaining:
+                    if use_ring:
+                        g = ring_reduce_scatter(g, ax, dim)
+                    else:
+                        g = jax.lax.psum_scatter(g, ax, scatter_dimension=dim, tiled=True)
+                    remaining.remove(ax)
+                else:
+                    n = jax.lax.psum(1, ax)
+                    chunk = g.shape[dim] // n
+                    start = jax.lax.axis_index(ax) * chunk
+                    g = jax.lax.dynamic_slice_in_dim(g, start, chunk, axis=dim)
+        for ax in remaining:
+            g = jax.lax.psum(g, ax)
+        return g
+
+    return jax.tree.map(scatter_leaf, tree, specs)
 
 
 # ---------------------------------------------------------------------------

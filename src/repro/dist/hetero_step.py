@@ -15,13 +15,23 @@ padding.  Two numerically identical executions of the same math:
 * ``mode="masked"`` — plain GSPMD arithmetic masking: scan over the W_max
   slots, vmap over ranks, weight each slot by ``1[j < alloc[r]]``.  Runs
   anywhere (including 1 device) and stays legal when parameters are sharded
-  over the allocation axis (FSDP), where while-mode is forbidden — see
-  :meth:`HeteroStepConfig.validate`.
+  over the allocation axis with per-microbatch FSDP gathers, where
+  while-mode is forbidden — see :meth:`HeteroStepConfig.validate`.
 
-Both normalize the summed gradient by the GLOBAL token count, so the update
-depends only on the union of microbatches, not on which rank computed which
-(the paper's eq. 1 allocation-invariance: reallocating work between ranks
-never changes the training trajectory).
+While-mode additionally supports ``fsdp="gather"``: params and optimizer
+state LIVE sharded over ``fsdp_axes`` (ZeRO-style, specs from
+``dist/sharding.py``), and each step all-gathers the params exactly ONCE
+before the per-rank loops, accumulates locally with divergent trip counts,
+then reduce-scatters the gradient sum back to shards for the (sharded,
+elementwise) optimizer update.  Every collective — the gather, the
+reduce-scatter, the scalar psums — executes a uniform number of times per
+rank, so while+FSDP becomes legal; only per-microbatch gathers
+(``fsdp=True``) stay forbidden under while-mode.
+
+All modes normalize the summed gradient by the GLOBAL token count, so the
+update depends only on the union of microbatches, not on which rank computed
+which (the paper's eq. 1 allocation-invariance: reallocating work between
+ranks never changes the training trajectory).
 """
 
 from __future__ import annotations
@@ -30,10 +40,13 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.dist import compat
-from repro.dist.collectives import ring_allreduce_tree
+from repro.dist.collectives import all_gather_params, reduce_scatter_tree, ring_allreduce_tree
+from repro.dist.sharding import state_specs
 from repro.models import transformer
 from repro.models.config import ModelConfig
 from repro.optim import (
@@ -60,7 +73,11 @@ class HeteroStepConfig:
     seq_len: int
     mode: str = "masked"  # "while" | "masked"
     alloc_axis: str = "data"  # mesh axis the allocation ranks live on
-    fsdp: bool = False  # params sharded over fsdp_axes (ZeRO-3)
+    # False: replicated params.  True: params sharded over fsdp_axes with
+    # per-microbatch GSPMD gathers (masked mode only).  "gather": params AND
+    # optimizer state sharded; ONE explicit all-gather per step outside the
+    # per-rank loops, gradients reduce-scattered back (while mode only).
+    fsdp: bool | str = False
     fsdp_axes: tuple[str, ...] = ("data",)
     optimizer: str = "adamw"  # "adamw" | "sgd"
     grad_dtype: str = "float32"  # accumulation dtype
@@ -77,25 +94,36 @@ class HeteroStepConfig:
             raise ValueError(f"collective must be 'psum' or 'ring', got {self.collective!r}")
         if self.w_max < 1 or self.micro_bs < 1 or self.seq_len < 1:
             raise ValueError("w_max, micro_bs and seq_len must all be >= 1")
+        if self.fsdp not in (False, True, "gather"):
+            raise ValueError(f"fsdp must be False, True or 'gather', got {self.fsdp!r}")
+        if self.fsdp == "gather" and self.mode != "while":
+            raise ValueError(
+                "fsdp='gather' is the while-mode state-sharding path (one gather per "
+                "step outside the loops); masked mode shards params with fsdp=True "
+                "and lets GSPMD place the per-microbatch gathers."
+            )
 
     def validate(self, mesh) -> "HeteroStepConfig":
         """Check legality against a mesh.  The load-bearing invariant: in
         while-mode, ranks execute DIFFERENT trip counts, so any collective
         inside the loop body is executed a different number of times per
-        rank.  FSDP over the allocation axis puts parameter all-gathers
-        inside every microbatch's forward — ranks with small allocations
-        would stop participating while big ranks still wait on them: a
-        deadlock on real hardware.  Masked mode (same trip count everywhere,
-        masked arithmetic) is the legal way to combine the two."""
+        rank.  Per-microbatch FSDP (``fsdp=True``) over the allocation axis
+        puts parameter all-gathers inside every microbatch's forward — ranks
+        with small allocations would stop participating while big ranks
+        still wait on them: a deadlock on real hardware.  ``fsdp="gather"``
+        hoists the gather OUT of the loops (one per step, uniform across
+        ranks) and is therefore legal; so is masked mode (same trip count
+        everywhere, masked arithmetic)."""
         axis_names = tuple(mesh.axis_names)
         if self.alloc_axis not in axis_names:
             raise ValueError(f"alloc_axis {self.alloc_axis!r} not in mesh axes {axis_names}")
-        if self.mode == "while" and self.fsdp and self.alloc_axis in self.fsdp_axes:
+        if self.mode == "while" and self.fsdp is True and self.alloc_axis in self.fsdp_axes:
             raise ValueError(
-                f"while-mode with FSDP over the allocation axis {self.alloc_axis!r} would "
-                "deadlock: per-rank trip counts diverge but FSDP all-gathers inside the "
-                "loop body are collective over that axis. Use mode='masked' (or move FSDP "
-                "off the allocation axis)."
+                "while-mode with per-microbatch FSDP over the allocation axis "
+                f"{self.alloc_axis!r} would deadlock: per-rank trip counts diverge but "
+                "FSDP all-gathers inside the loop body are collective over that axis. "
+                "Use fsdp='gather' (one gather per step, outside the loops), "
+                "mode='masked', or move FSDP off the allocation axis."
             )
         return self
 
@@ -167,11 +195,12 @@ def _masked_grads(params, inputs, targets, alloc, cfg, scfg):
     return gsum, lsum, tsum
 
 
-def _while_grads(params, inputs, targets, alloc, cfg, scfg):
-    """Manual-mode body: per-local-rank while loops with dynamic trip counts.
+def _while_accum(params, inputs, targets, alloc, cfg, scfg):
+    """Per-local-rank while loops with dynamic trip counts (NO collectives).
 
     Runs inside shard_map over ``scfg.alloc_axis``; ``inputs`` is the local
-    (R_local, W, mb, S) block.  Each rank does exactly ``alloc[r]`` grads.
+    (R_local, W, mb, S) block.  Each rank does exactly ``alloc[r]`` grads
+    and returns its LOCAL (grad_sum, loss_sum, token_sum).
     """
     grad_fn = _grad_fn(cfg, scfg)
     gdt = jnp.dtype(scfg.grad_dtype)
@@ -192,7 +221,12 @@ def _while_grads(params, inputs, targets, alloc, cfg, scfg):
 
         init = (jnp.zeros((), jnp.int32),) + carry
         carry = jax.lax.while_loop(cond, body, init)[1:]
-    gsum, lsum, tsum = carry
+    return carry
+
+
+def _while_grads(params, inputs, targets, alloc, cfg, scfg):
+    """While-mode with replicated params: local loops, then allreduce."""
+    gsum, lsum, tsum = _while_accum(params, inputs, targets, alloc, cfg, scfg)
     # cross-rank reduction: the ONLY collective in the step — the paper's
     # plug-in point.  Scalars always ride psum; the gradient tree may take
     # the explicit ring.
@@ -201,6 +235,26 @@ def _while_grads(params, inputs, targets, alloc, cfg, scfg):
         gsum = ring_allreduce_tree(gsum, ax)
     else:
         gsum = jax.lax.psum(gsum, ax)
+    lsum = jax.lax.psum(lsum, ax)
+    tsum = jax.lax.psum(tsum, ax)
+    return gsum, lsum, tsum
+
+
+def _gathered_while_grads(shards, inputs, targets, alloc, cfg, scfg, pspecs):
+    """While-mode over SHARDED params (``fsdp="gather"``).
+
+    ``shards`` is the local param-shard tree laid out per ``pspecs``.  The
+    whole tree is all-gathered ONCE (uniform collective count per rank —
+    legal with divergent trip counts), grads accumulate locally, and the
+    gradient sum is reduce-scattered straight back to the shard layout, so
+    only one gathered params copy is ever live and the persistent state
+    stays at 1/N per device.
+    """
+    ring = scfg.collective == "ring"
+    params = all_gather_params(shards, pspecs, use_ring=ring)
+    gsum, lsum, tsum = _while_accum(params, inputs, targets, alloc, cfg, scfg)
+    ax = scfg.alloc_axis
+    gsum = reduce_scatter_tree(gsum, pspecs, reduce_axes=(ax,), use_ring=ring)
     lsum = jax.lax.psum(lsum, ax)
     tsum = jax.lax.psum(tsum, ax)
     return gsum, lsum, tsum
@@ -238,6 +292,16 @@ def build_train_step(
 
     n_rank_shards = int(dict(mesh.shape)[scfg.alloc_axis])
 
+    use_gather = scfg.mode == "while" and scfg.fsdp == "gather"
+    if use_gather:
+        # Specs the persistent state lives under (and the shard_map in/out
+        # layout).  Built from abstract shapes so no params are materialized.
+        state_shape = jax.eval_shape(lambda k: init_train_state(cfg, scfg, k, opt_cfg=ocfg), jax.random.PRNGKey(0))
+        sspecs = state_specs(state_shape, mesh, fsdp=True, fsdp_axes=scfg.fsdp_axes)
+        pspecs = sspecs["params"]
+    else:
+        sspecs = pspecs = None
+
     def global_grads(params, inputs, targets, alloc):
         if scfg.mode == "masked":
             return _masked_grads(params, inputs, targets, alloc, cfg, scfg)
@@ -249,20 +313,47 @@ def build_train_step(
         # Fully-manual region (every mesh axis): partial-auto shard_map trips
         # the XLA SPMD partitioner CHECK (spmd_partitioner.cc:512) on the
         # transformer's gather/scan patterns — same limitation DESIGN.md §5
-        # records for the multi-pod cells.  Params enter replicated (P()), so
-        # non-allocation shards redundantly compute identical grads; the
-        # psum/ring runs over the allocation axis only.
+        # records for the multi-pod cells.  The psum/ring runs over the
+        # allocation axis only.
         ax = scfg.alloc_axis
-        body = compat.shard_map(
-            lambda p, x, y, a: _while_grads(p, x, y, a, cfg, scfg),
-            mesh,
-            in_specs=(P(), P(ax, None, None, None), P(ax, None, None, None), P(ax)),
-            out_specs=(P(), P(), P()),
-            check_rep=False,
-        )
+        batch_specs = (P(ax, None, None, None), P(ax, None, None, None), P(ax))
+        if use_gather:
+            # Params enter SHARDED per pspecs; one gather inside, gradients
+            # leave as shards (out_specs = pspecs).
+            body = compat.shard_map(
+                lambda p, x, y, a: _gathered_while_grads(p, x, y, a, cfg, scfg, pspecs),
+                mesh,
+                in_specs=(pspecs,) + batch_specs,
+                out_specs=(pspecs, P(), P()),
+                check_rep=False,
+            )
+        else:
+            # Params enter replicated (P()); non-allocation shards
+            # redundantly compute identical grads.
+            body = compat.shard_map(
+                lambda p, x, y, a: _while_grads(p, x, y, a, cfg, scfg),
+                mesh,
+                in_specs=(P(),) + batch_specs,
+                out_specs=(P(), P(), P()),
+                check_rep=False,
+            )
         return body(params, inputs, targets, alloc)
 
     def step(state, batch):
+        # host-side guard for eager (jit=False) callers; a no-op on tracers.
+        # The jit=True wrapper below re-checks per call, because this body is
+        # traced once and then bypassed by the compiled cache.
+        _host_check_alloc(batch.get("alloc"), scfg.w_max)
+        if use_gather:
+            # Pin the persistent state to the ZeRO shard layout regardless of
+            # how the caller placed it; everything downstream of the
+            # reduce-scatter (normalize, clip, optimizer) is elementwise on
+            # shards (clipping's global norm adds one scalar allreduce).
+            state = jax.tree.map(
+                lambda x, s: jax.lax.with_sharding_constraint(x, NamedSharding(mesh, s)),
+                state,
+                sspecs,
+            )
         inputs = batch["inputs"]
         targets = batch["targets"]
         alloc = batch["alloc"].astype(jnp.int32)
@@ -284,6 +375,32 @@ def build_train_step(
         }
         return new_state, metrics
 
-    if jit:
-        return jax.jit(step, donate_argnums=(0,))
-    return step
+    if not jit:
+        return step
+    jitted = jax.jit(step, donate_argnums=(0,))
+
+    def checked_step(state, batch):
+        _host_check_alloc(batch.get("alloc"), scfg.w_max)
+        return jitted(state, batch)
+
+    return checked_step
+
+
+def _host_check_alloc(alloc, w_max: int) -> None:
+    """Reject ``alloc > w_max`` BEFORE tracing: inside the step the loop
+    clamps ``alloc`` to the buffer depth, which would silently drop the
+    overflowing microbatches instead of training on them."""
+    if alloc is None:
+        return
+    try:
+        a = np.asarray(alloc)
+    except Exception:  # traced value (under jit): shapes only, skip
+        return
+    if a.dtype == object:  # abstract stand-in (ShapeDtypeStruct lowering)
+        return
+    if a.size and int(a.max()) > w_max:
+        raise ValueError(
+            f"allocation {int(a.max())} exceeds w_max={w_max}: the step buffer holds "
+            "only w_max microbatch slots per rank, the excess would be silently "
+            "clamped. Lower the allocation or rebuild with a larger w_max."
+        )

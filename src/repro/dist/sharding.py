@@ -30,7 +30,7 @@ from typing import Any
 import jax
 from jax.sharding import PartitionSpec as P
 
-__all__ = ["param_specs", "cache_specs"]
+__all__ = ["param_specs", "state_specs", "cache_specs"]
 
 # weights whose INPUT dim is the big contracted one (row-parallel)
 _ROW_PARALLEL = {"wo", "w_down", "out_proj", "value"}
@@ -90,6 +90,29 @@ def param_specs(
         return P(*spec)
 
     return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def state_specs(
+    state: Any,
+    mesh,
+    fsdp: bool = True,
+    fsdp_axes: tuple[str, ...] = ("data",),
+) -> Any:
+    """Specs for a full train state ``{"params", "opt", "step"}``.
+
+    Optimizer moment trees (``mu``/``nu``/``velocity``) mirror the parameter
+    tree leaf-for-leaf, so they take the SAME specs — that is what makes
+    ``fsdp="gather"`` a ZeRO sharding: params, mu and nu all live at 1/N per
+    device and the optimizer update stays collective-free elementwise math
+    on shards.  Scalars (``step``, Adam's ``count``) are replicated.
+    """
+    pspecs = param_specs(state["params"], mesh, fsdp=fsdp, fsdp_axes=fsdp_axes)
+    mirrored = {"mu", "nu", "velocity"}
+    ospecs = {k: pspecs if k in mirrored else jax.tree.map(lambda _: P(), v) for k, v in state["opt"].items()}
+    out = {k: jax.tree.map(lambda _: P(), v) for k, v in state.items()}
+    out["params"] = pspecs
+    out["opt"] = ospecs
+    return out
 
 
 def cache_specs(cache: Any, mesh, dp_axes: tuple[str, ...] = ("data",)) -> Any:

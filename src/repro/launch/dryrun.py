@@ -30,7 +30,7 @@ import traceback  # noqa: E402
 import jax  # noqa: E402
 
 from repro.configs import SHAPES, list_archs, skip_reason  # noqa: E402
-from repro.launch.mesh import HW, make_production_mesh  # noqa: E402
+from repro.launch.mesh import HW, make_production_mesh, make_test_mesh  # noqa: E402
 from repro.launch.specs import plan_cell  # noqa: E402
 
 _DTYPE_BYTES = {
@@ -168,6 +168,10 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, hetero: bool) -> 
             kind=plan.kind,
             notes=plan.notes,
             compile_s=round(time.time() - t0, 1),
+            # persistent params+optimizer bytes on ONE device under the cell's
+            # state sharding — the figure the fsdp="gather" mode drives down
+            # (full replication would be n_devices x this on an FSDP mesh)
+            state_gb=round(plan.state_bytes_per_dev / 1e9, 3),
             arg_gb=round(ma.argument_size_in_bytes / 1e9, 3),
             temp_gb=round(ma.temp_size_in_bytes / 1e9, 3),
             out_gb=round(ma.output_size_in_bytes / 1e9, 3),
@@ -243,7 +247,13 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default=None, help="single arch id (default: all)")
     ap.add_argument("--shape", default=None, help="single shape name (default: all)")
-    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument(
+        "--mesh",
+        default="both",
+        choices=["single", "multi", "both", "data8"],
+        help="'data8' = an (8, 1) pure-data mesh: the fsdp='gather' memory "
+        "demonstrator (per-device state must drop ~8x vs replication)",
+    )
     ap.add_argument("--hetero", action="store_true", help="lower the while-mode hetero step with W_max headroom")
     ap.add_argument("--out", default="results/dryrun.json")
     ap.add_argument(
@@ -263,6 +273,8 @@ def main() -> None:
         meshes.append(("single_pod_16x16", make_production_mesh()))
     if args.mesh in ("multi", "both"):
         meshes.append(("multi_pod_2x16x16", make_production_mesh(multi_pod=True)))
+    if args.mesh == "data8":
+        meshes.append(("data8_8x1", make_test_mesh((8, 1), ("data", "model"))))
 
     records = []
     n_fail = 0
@@ -278,6 +290,7 @@ def main() -> None:
                         f"[OK]   {mesh_name:18s} {arch:28s} {shape_name:12s} "
                         f"{rec['compile_s']:6.1f}s  peak {rec['peak_gb']:7.2f} GB/dev "
                         f"{'FITS' if rec['fits_hbm'] else 'OOM '}  "
+                        f"state {rec['state_gb']:7.3f} GB/dev  "
                         f"flops/dev {rec['hlo_flops_per_dev']/1e12:8.3f}T  "
                         f"coll {rec['collective_bytes_per_dev']/1e9:7.3f} GB  ({rec['notes']})",
                         flush=True,

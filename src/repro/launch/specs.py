@@ -21,7 +21,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import get_config, train_accum
 from repro.configs.shapes import SHAPES, ShapeSpec
 from repro.dist.hetero_step import HeteroStepConfig
-from repro.dist.sharding import cache_specs, param_specs
+from repro.dist.sharding import cache_specs, param_specs, state_specs
 from repro.models import transformer
 from repro.models.config import ModelConfig
 
@@ -43,6 +43,7 @@ class CellPlan:
     out_shardings: Any
     fn: Any  # the python callable to jit
     notes: str = ""
+    state_bytes_per_dev: int = 0  # persistent params+opt bytes on ONE device (train)
 
 
 def _ns(mesh: Mesh, spec: P) -> NamedSharding:
@@ -74,9 +75,14 @@ def plan_cell(arch: str, shape_name: str, mesh: Mesh, hetero: bool = False) -> C
 
     if shape.kind == "train":
         return _plan_train(arch, shape, cfg, mesh, params_shape, hetero)
+    # serving cells: persistent state is the param tree under pspecs
+    param_bytes = _sharded_bytes(params_shape, pspecs, mesh)
     if shape.kind == "prefill":
-        return _plan_prefill(arch, shape, cfg, mesh, params_shape, pshard, dp)
-    return _plan_decode(arch, shape, cfg, mesh, params_shape, pshard, dp)
+        plan = _plan_prefill(arch, shape, cfg, mesh, params_shape, pshard, dp)
+    else:
+        plan = _plan_decode(arch, shape, cfg, mesh, params_shape, pshard, dp)
+    plan.state_bytes_per_dev = param_bytes
+    return plan
 
 
 # ---------------------------------------------------------------------------
@@ -92,9 +98,11 @@ def _plan_train(arch, shape, cfg, mesh, params_shape, hetero) -> CellPlan:
     huge = total_params > 1e11  # jamba-class: needs every memory lever
     accum = train_accum(arch)
 
+    fsdp_mode: bool | str = fsdp  # what HeteroStepConfig.fsdp gets
     if multi_pod and huge:
-        # 398B-class: full ZeRO-3 over (pod, data) — only masked allocation is
-        # legal (params sharded over the allocation axis), see hetero_step.
+        # 398B-class: full ZeRO-3 over (pod, data) — a gathered params copy
+        # would not fit, so per-microbatch FSDP with masked allocation (the
+        # only legal combination at this scale), see hetero_step.
         alloc_axis, mode = "pod", "masked"
         fsdp_axes: tuple[str, ...] = ("pod", "data")
         accum = min(accum, 8)
@@ -113,13 +121,17 @@ def _plan_train(arch, shape, cfg, mesh, params_shape, hetero) -> CellPlan:
         fsdp_axes = ("data",)
         accum = min(accum, 8)  # keep micro_bs divisible by the data axis
     elif fsdp:
-        alloc_axis, mode = "data", "masked"  # FSDP over data: while illegal
+        # ZeRO gather-mode: state lives sharded over "data", ONE all-gather
+        # per step outside the per-rank loops — while-mode's divergent trip
+        # counts stay legal because the collective count per rank is uniform.
+        alloc_axis, mode = "data", "while"
+        fsdp_mode = "gather"
         fsdp_axes = ("data",)
     else:
         alloc_axis, mode = "data", "while"
         fsdp_axes = ("data",)
 
-    pspecs = param_specs(params_shape, mesh, fsdp=fsdp, fsdp_axes=fsdp_axes)
+    pspecs = param_specs(params_shape, mesh, fsdp=bool(fsdp_mode), fsdp_axes=fsdp_axes)
 
     R = mesh.shape[alloc_axis]
     per_rank_seqs = shape.global_batch // R
@@ -133,7 +145,8 @@ def _plan_train(arch, shape, cfg, mesh, params_shape, hetero) -> CellPlan:
         seq_len=shape.seq_len,
         mode=mode,
         alloc_axis=alloc_axis,
-        fsdp=fsdp,
+        fsdp=fsdp_mode,
+        fsdp_axes=fsdp_axes,
         optimizer="adamw",
         grad_dtype="bfloat16" if huge else "float32",
     )
@@ -148,13 +161,9 @@ def _plan_train(arch, shape, cfg, mesh, params_shape, hetero) -> CellPlan:
         lambda p: {"params": p, "opt": adamw_init(p, opt_cfg), "step": jnp.zeros((), jnp.int32)},
         params_shape,
     )
-    opt_specs = {
-        "mu": pspecs,
-        "nu": pspecs,
-        "count": P(),
-    }
-    state_specs = {"params": pspecs, "opt": opt_specs, "step": P()}
-    state_shard = jax.tree.map(lambda s: _ns(mesh, s), state_specs)
+    sspecs = state_specs(state_shape, mesh, fsdp=bool(fsdp_mode), fsdp_axes=fsdp_axes)
+    state_shard = jax.tree.map(lambda s: _ns(mesh, s), sspecs)
+    state_bytes = _sharded_bytes(state_shape, sspecs, mesh)
 
     # batch: (R, W_max, mb, S); mb sharded over "data" in multi-pod meshes
     tok_dt = jnp.int32
@@ -185,8 +194,26 @@ def _plan_train(arch, shape, cfg, mesh, params_shape, hetero) -> CellPlan:
         in_shardings=(state_shard, batch_shard),
         out_shardings=(state_shard, metrics_shard),
         fn=step_fn,
-        notes=f"mode={mode} alloc_axis={alloc_axis} fsdp={fsdp} accum={w}x{micro_bs} moments={moment_dtype}",
+        notes=f"mode={mode} alloc_axis={alloc_axis} fsdp={fsdp_mode} accum={w}x{micro_bs} moments={moment_dtype}",
+        state_bytes_per_dev=state_bytes,
     )
+
+
+def _sharded_bytes(shapes: Any, specs: Any, mesh: Mesh) -> int:
+    """Per-device bytes of an abstract tree laid out under ``specs`` — the
+    persistent params+optimizer footprint the dryrun reports per cell."""
+    sizes = dict(mesh.shape)
+
+    def leaf_bytes(leaf, spec) -> int:
+        n_shards = 1
+        for entry in tuple(spec):
+            if entry is None:
+                continue
+            for ax in entry if isinstance(entry, tuple) else (entry,):
+                n_shards *= int(sizes[ax])
+        return int(leaf.size) * leaf.dtype.itemsize // n_shards
+
+    return sum(jax.tree.leaves(jax.tree.map(leaf_bytes, shapes, specs)))
 
 
 def _plan_prefill(arch, shape, cfg, mesh, params_shape, pshard, dp) -> CellPlan:

@@ -50,7 +50,22 @@ def parse_args(argv=None):
     ap.add_argument("--total-micro", type=int, default=16, help="C: microbatches per step")
     ap.add_argument("--w-max", type=int, default=0, help="buffer depth (0 -> 2*C/n)")
     ap.add_argument("--policy", default="adaptive", choices=["adaptive", "equal", "static"])
-    ap.add_argument("--static-ratio", default=None, help="comma ints, e.g. 6,4 (policy=static)")
+    ap.add_argument("--static-ratio", default=None, help="comma ints, e.g. 6,4 (required with --policy static)")
+    ap.add_argument(
+        "--mode",
+        default="masked",
+        choices=["masked", "while"],
+        help="step mode: 'masked' (GSPMD arithmetic masking; runs anywhere incl. "
+        "1 device) or 'while' (per-rank trip counts; the paper's fast path)",
+    )
+    ap.add_argument(
+        "--fsdp",
+        default="none",
+        choices=["none", "gather"],
+        help="'gather' shards params+optimizer state over the data axis and "
+        "all-gathers params once per step (while-mode ZeRO; legal with "
+        "divergent trip counts because the collective count is uniform)",
+    )
     ap.add_argument("--hetero-gpus", default=None, help="comma GPU names for simulated speeds")
     ap.add_argument("--steps-per-epoch", type=int, default=4, help="aggregations per 'epoch' (controller cadence)")
     ap.add_argument("--lr", type=float, default=3e-4)
@@ -59,7 +74,14 @@ def parse_args(argv=None):
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", default=None)
-    return ap.parse_args(argv)
+    args = ap.parse_args(argv)
+    if args.policy == "static" and not args.static_ratio:
+        ap.error("--policy static requires --static-ratio (e.g. --static-ratio 6,4); "
+                 "without it the run would silently train with an equal allocation")
+    if args.fsdp == "gather" and args.mode != "while":
+        ap.error("--fsdp gather pairs with --mode while (one gather per step outside "
+                 "the per-rank loops); masked mode has no gather to hoist")
+    return args
 
 
 def main(argv=None) -> dict:
@@ -78,8 +100,10 @@ def main(argv=None) -> dict:
         w_max=w_max,
         micro_bs=args.micro_bs,
         seq_len=args.seq if args.smoke else cfg.max_seq,
-        mode="masked",  # single-host: masked mode runs everywhere incl. 1 device
+        mode=args.mode,  # masked runs everywhere incl. 1 device; while+gather = ZeRO path
         alloc_axis="data",
+        fsdp="gather" if args.fsdp == "gather" else False,
+        fsdp_axes=("data",),
         optimizer="adamw",
     )
     step = build_train_step(
@@ -92,7 +116,7 @@ def main(argv=None) -> dict:
     cluster = ClusterSpec.from_gpus(gpus, seed=args.seed)
     timing = SimulatedTimingSource(cluster)
     ctl = AdaptiveAllocationController(ControllerConfig(total=C, n_workers=n, w_min=1))
-    if args.policy == "static" and args.static_ratio:
+    if args.policy == "static":
         from repro.core import static_allocation
 
         ratios = [float(x) for x in args.static_ratio.split(",")]
@@ -115,8 +139,11 @@ def main(argv=None) -> dict:
     if mgr and args.resume and mgr.latest_step() is not None:
         start_step, state, meta = mgr.restore(state)
         ctl = AdaptiveAllocationController.from_state_dict(json.loads(meta["controller"]))
-        alloc = ctl.allocation
-        print(f"[resume] step {start_step}, allocation {alloc.tolist()}")
+        if args.policy != "static":
+            # static policy keeps the --static-ratio allocation: the restored
+            # controller's (equal-by-default) allocation must not override it
+            alloc = ctl.allocation
+        print(f"[resume] step {start_step}, allocation {np.asarray(alloc).tolist()}")
 
     # --- loop -------------------------------------------------------------------
     losses, sim_epoch_times = [], TimingLog()

@@ -43,21 +43,32 @@ class SimulatedTimingSource:
 
 
 class MeasuredTimingSource:
-    """Wall-clock timing: call ``start()``/``stop(rank)`` around compute."""
+    """Wall-clock timing: call ``start(rank)``/``stop(rank)`` around compute.
 
-    def __init__(self, n_ranks: int) -> None:
+    Start timestamps are kept PER RANK, so timing windows of different ranks
+    may overlap freely (the normal case when one host times several local
+    ranks whose compute segments interleave); ``stop(rank)`` always closes
+    the window ``start(rank)`` opened.  ``start()`` without a rank opens one
+    anonymous window, consumed by the next ``stop`` of a rank that has no
+    open window of its own (the legacy single-rank-at-a-time pattern).
+    """
+
+    def __init__(self, n_ranks: int, clock: Callable[[], float] = time.perf_counter) -> None:
         self.n_ranks = n_ranks
-        self._start: float | None = None
+        self._clock = clock
+        self._starts: dict[int | None, float] = {}
         self._acc = np.zeros(n_ranks)
 
-    def start(self) -> None:
-        self._start = time.perf_counter()
+    def start(self, rank: int | None = None) -> None:
+        self._starts[rank] = self._clock()
 
     def stop(self, rank: int) -> None:
-        if self._start is None:
+        t0 = self._starts.pop(rank, None)
+        if t0 is None:
+            t0 = self._starts.pop(None, None)
+        if t0 is None:
             raise RuntimeError("stop() before start()")
-        self._acc[rank] += time.perf_counter() - self._start
-        self._start = None
+        self._acc[rank] += self._clock() - t0
 
     def epoch_times(self, alloc: Sequence[int] | None = None, epoch: int | None = None) -> np.ndarray:
         out = self._acc.copy()
@@ -75,30 +86,48 @@ class StragglerFlag:
 
 
 class StragglerMonitor:
-    """Rolling per-worker compute-time statistics."""
+    """Rolling PER-WORKER compute-time statistics.
+
+    Each worker is z-scored against its OWN rolling baseline (mean/std of
+    its recent non-flagged observations), never against the fleet: a
+    stable-but-heterogeneous cluster — a 3x slower GTX in a V100 fleet that
+    is ALWAYS 3x slower — is exactly what the allocation controller handles
+    and must produce no flags.  A flag means a worker got slower than *its
+    own* history.  Flagged observations are not absorbed into the baseline,
+    so a worker that degrades for good keeps flagging (``persistent=True``)
+    instead of normalizing its own slowdown away.
+    """
 
     def __init__(self, n_workers: int, window: int = 8, z_threshold: float = 2.5) -> None:
         self.n_workers = n_workers
         self.window = window
         self.z_threshold = z_threshold
-        self._hist: deque[np.ndarray] = deque(maxlen=window)
+        self._hist: deque[np.ndarray] = deque(maxlen=window)  # raw observations
+        self._base: list[deque[float]] = [deque(maxlen=window) for _ in range(n_workers)]
 
     def observe(self, per_sample_time: Sequence[float]) -> list[StragglerFlag]:
         """Feed normalized (per-microbatch) compute times; returns flags."""
         t = np.asarray(per_sample_time, dtype=np.float64)
         self._hist.append(t)
-        if len(self._hist) < 3:
+        if len(self._hist) < 4:  # warmup: seed each worker's baseline
+            for i in range(self.n_workers):
+                self._base[i].append(float(t[i]))
             return []
-        hist = np.stack(self._hist)  # (k, n)
-        mean = hist.mean()
-        std = max(hist.std(), 1e-12)
-        z = (t - mean) / std
         flags = []
         for i in range(self.n_workers):
-            if z[i] > self.z_threshold:
-                recent = hist[-3:, i]
+            base = np.asarray(self._base[i])
+            mean = base.mean()
+            # std floor: a short or jitter-free baseline must not turn normal
+            # measurement noise into huge z-scores — 2% of the worker's own
+            # mean (so the default z_threshold=2.5 needs a >5% deviation)
+            std = max(base.std(), 2e-2 * abs(mean), 1e-12)
+            z = (t[i] - mean) / std
+            if z > self.z_threshold:
+                recent = np.array([h[i] for h in list(self._hist)[-3:]])
                 persistent = bool(np.all((recent - mean) / std > self.z_threshold))
-                flags.append(StragglerFlag(worker=i, z_score=float(z[i]), persistent=persistent))
+                flags.append(StragglerFlag(worker=i, z_score=float(z), persistent=persistent))
+            else:
+                self._base[i].append(float(t[i]))
         return flags
 
     def imbalance(self) -> float:

@@ -71,6 +71,36 @@ def test_rounding_infeasible_raises():
         al.largest_remainder_round(np.array([1.0, 1.0]), 1, w_min=1)
 
 
+def test_rounding_deficit_exceeding_n_spreads_whole_rounds():
+    # targets sum far below total: the deficit (10) exceeds n (3), so whole
+    # rounds are spread uniformly first, then the remainder goes to the
+    # largest fractional parts
+    out = al.largest_remainder_round(np.array([0.2, 0.1, 0.1]), 10, w_min=0)
+    assert out.sum() == 10
+    assert out.tolist() == [4, 3, 3]  # +3 each, last +1 to the 0.2 remainder
+
+
+def test_rounding_deficit_remainder_tie_breaks_by_index():
+    # equal fractional parts: the stable argsort hands the remainder to the
+    # earliest indices, deterministically
+    out = al.largest_remainder_round(np.array([0.5, 0.5, 0.5, 0.5]), 6, w_min=0)
+    assert out.tolist() == [2, 2, 1, 1]
+
+
+def test_rounding_deficit_exact_whole_rounds_only():
+    # deficit is an exact multiple of n: no remainder pass at all
+    out = al.largest_remainder_round(np.zeros(4), 8, w_min=0)
+    assert out.tolist() == [2, 2, 2, 2]
+
+
+def test_rounding_w_min_overshoot_removes_from_furthest_above_target():
+    # many entries clamp UP to w_min, overshooting total; the fix removes
+    # from entries furthest above their real-valued target
+    out = al.largest_remainder_round(np.array([0.1, 0.1, 5.8]), 3, w_min=1)
+    assert out.sum() == 3
+    assert out.tolist() == [1, 1, 1]
+
+
 # ---------------------------------------------------------------------------
 # static allocation (§III.A)
 # ---------------------------------------------------------------------------

@@ -26,24 +26,70 @@ def sampler_problem(draw):
 
 @given(sampler_problem(), st.integers(0, 3))
 @settings(max_examples=80, deadline=None)
-def test_sampler_every_sample_at_most_once_and_proportional(problem, epoch):
-    """Paper §III.A: 'no remaining samples without training after one epoch'
-    within complete aggregations; shares are exactly w_i * micro each."""
+def test_sampler_every_sample_exactly_once_and_proportional(problem, epoch):
+    """Paper §III.A: 'no remaining samples without training after one epoch'.
+    Full aggregations carry exactly w_i * micro per worker; the final partial
+    aggregation (when dataset_size is not a multiple of one aggregation)
+    splits the tail proportionally instead of dropping it."""
     dataset_size, micro, alloc = problem
     s = ProportionalSampler(dataset_size, micro)
     plan = s.epoch_plan(epoch, alloc)
     n_agg = s.aggregations_per_epoch(alloc)
+    n_full = dataset_size // (int(alloc.sum()) * micro)
     assert all(len(p) == n_agg for p in plan)
     seen = []
     for i, w in enumerate(alloc):
         for a in range(n_agg):
-            assert len(plan[i][a]) == w * micro
+            if a < n_full:
+                assert len(plan[i][a]) == w * micro
+            else:  # partial tail: a whole number of microbatches, <= full share
+                assert len(plan[i][a]) % micro == 0
+                assert len(plan[i][a]) <= w * micro
             seen.extend(plan[i][a].tolist())
-    # no duplicates, all within range
-    assert len(seen) == len(set(seen))
-    assert set(seen) <= set(range(dataset_size))
-    # complete aggregations consume agg_samples each
-    assert len(seen) == n_agg * int(alloc.sum()) * micro
+    # EVERY index exactly once — nothing dropped, nothing duplicated
+    assert sorted(seen) == list(range(dataset_size))
+
+
+def test_sampler_no_dropped_samples_non_divisible():
+    """Regression: dataset_size % (sum(alloc) * micro) != 0 used to silently
+    drop the tail; now every index appears exactly once per epoch, under a
+    CHANGING allocation between epochs."""
+    micro = 2
+    s = ProportionalSampler(100, micro)  # 100 = 8 full aggs of 12 + tail of 4
+    for epoch, alloc in enumerate([np.array([3, 2, 1]), np.array([1, 1, 4]), np.array([2, 2, 2])]):
+        plan = s.epoch_plan(epoch, alloc)
+        seen = np.concatenate([idx for worker in plan for idx in worker])
+        assert sorted(seen.tolist()) == list(range(100)), (epoch, alloc)
+        # the tail is split proportionally: every share is whole microbatches
+        for i in range(len(alloc)):
+            assert all(len(a) % micro == 0 for a in plan[i])
+
+
+def test_sampler_partial_aggregation_is_proportional():
+    s = ProportionalSampler(16, 1)
+    alloc = np.array([3, 1])
+    plan = s.epoch_plan(0, alloc)  # 4 full aggs of 4, no tail
+    assert all(len(p) == 4 for p in plan)
+    s2 = ProportionalSampler(18, 1)
+    plan2 = s2.epoch_plan(0, alloc)  # tail of 2 -> split [2, 0] by largest remainder
+    assert [len(a) for a in plan2[0]] == [3, 3, 3, 3, 2]
+    assert [len(a) for a in plan2[1]] == [1, 1, 1, 1, 0]
+    assert s2.aggregations_per_epoch(alloc) == 5
+
+
+def test_hetero_batcher_emits_partial_tail_allocation():
+    d = SyntheticLM(vocab_size=50, seq_len=8, n_sequences=100, seed=0)
+    batcher = HeteroBatcher(d, n_ranks=3, micro_batch=2, w_max=6, seed=0)
+    alloc = np.array([3, 2, 1])
+    batches = list(batcher.epoch(0, alloc))
+    assert len(batches) == 9  # 8 full + 1 partial
+    total = sum(int(b["alloc"].sum()) * 2 for b in batches)
+    assert total == 100  # zero dropped samples
+    last = batches[-1]
+    assert int(last["alloc"].sum()) * 2 == 100 - 8 * 12
+    # padding rows beyond each rank's (per-aggregation) share stay zero
+    for i, w in enumerate(last["alloc"]):
+        assert np.all(last["inputs"][i, w:] == 0)
 
 
 def test_sampler_reshuffles_by_epoch():

@@ -80,6 +80,109 @@ def test_while_equals_masked_equals_reference():
 
 
 @pytest.mark.slow
+def test_while_gather_fsdp_equals_masked_equals_reference():
+    """The tentpole: while-mode with fsdp='gather' (state sharded, ONE
+    all-gather per step, gradients reduce-scattered back) is numerically the
+    masked/reference step — and the state actually lives sharded."""
+    out = run_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.models import ModelConfig
+        from repro.dist import HeteroStepConfig, build_train_step, init_train_state
+        from repro.dist.hetero_step import _micro_loss_sum
+        from repro.launch.mesh import make_test_mesh
+
+        mesh = make_test_mesh((4, 2), ("data", "model"))
+        cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                          n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=101,
+                          compute_dtype="float32", remat=False)
+        kw = dict(w_max=4, micro_bs=8, seq_len=16, alloc_axis="data")
+        sg = HeteroStepConfig(mode="while", fsdp="gather", **kw)
+        sr = HeteroStepConfig(mode="while", fsdp="gather", collective="ring", **kw)
+        sm = HeteroStepConfig(mode="masked", **kw)
+        state = init_train_state(cfg, sg, jax.random.PRNGKey(0))
+        R, W, mb, S = 4, 4, 8, 16
+        inputs = jax.random.randint(jax.random.PRNGKey(7), (R, W, mb, S), 0, 101)
+        targets = jax.random.randint(jax.random.PRNGKey(8), (R, W, mb, S), 0, 101)
+        alloc = jnp.array([1, 2, 3, 4], jnp.int32)
+        batch = {"inputs": inputs, "targets": targets, "alloc": alloc}
+        s1, m1 = build_train_step(cfg, sg, mesh)(jax.tree.map(lambda x: x.copy(), state), batch)
+        s2, m2 = build_train_step(cfg, sm, mesh)(jax.tree.map(lambda x: x.copy(), state), batch)
+        s3, m3 = build_train_step(cfg, sr, mesh)(jax.tree.map(lambda x: x.copy(), state), batch)
+        # reference loss over the union of live microbatches
+        gf = jax.value_and_grad(lambda p, x, y: _micro_loss_sum(p, x, y, cfg, sg), has_aux=True)
+        toks, lsum = 0.0, 0.0
+        for r in range(R):
+            for j in range(int(alloc[r])):
+                (ls, tk), _ = gf(state["params"], inputs[r, j], targets[r, j])
+                toks += float(tk); lsum += float(ls)
+        np.testing.assert_allclose(float(m1["loss"]), lsum / toks, rtol=1e-5)
+        for other in (s2, s3):
+            d = max(jax.tree.leaves(jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                                                 s1["params"], other["params"])))
+            assert d < 1e-5, d
+        # params AND optimizer moments live sharded (ZeRO), not replicated
+        n_dev = len(jax.devices())
+        for tree in (s1["params"], s1["opt"]["mu"]):
+            leaves = jax.tree.leaves(tree)
+            assert any(not x.sharding.is_fully_replicated for x in leaves)
+            frac = sum(x.addressable_shards[0].data.size for x in leaves) / sum(x.size for x in leaves)
+            assert frac < 0.2, frac  # ~1/8 per device, far from full replication
+        print("OK")
+        """
+    )
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_gather_collectives_match_psum_references():
+    """ring/psum all-gather + reduce-scatter primitives against lax references."""
+    out = run_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.dist import (all_gather_params, reduce_scatter_tree,
+                                ring_all_gather, ring_reduce_scatter)
+        from repro.dist.compat import shard_map
+        from repro.launch.mesh import make_test_mesh
+
+        mesh = make_test_mesh((8,), ("w",))
+        x = jax.random.normal(jax.random.PRNGKey(0), (8, 16, 6))
+
+        def prim(x):
+            local = x[0]  # (16, 6): dim 0 divisible by the ring, dim 1 not
+            ag = ring_all_gather(local, "w", 1) - jax.lax.all_gather(local, "w", axis=1, tiled=True)
+            rs = ring_reduce_scatter(local, "w", 0) - jax.lax.psum_scatter(
+                local, "w", scatter_dimension=0, tiled=True)
+            return jnp.abs(ag).max()[None], jnp.abs(rs).max()[None]
+        f = jax.jit(shard_map(prim, mesh, in_specs=P("w"), out_specs=(P("w"), P("w")), check_rep=False))
+        a, b = f(x)
+        assert float(a.max()) < 1e-5 and float(b.max()) < 1e-5, (a.max(), b.max())
+
+        # tree round-trip: shards -> gather -> (simulated grads) reduce-scatter
+        mesh2 = make_test_mesh((4, 2), ("data", "model"))
+        specs = {"a": P("data", "model"), "b": P(None, "data"), "c": P()}
+        full = {"a": jax.random.normal(jax.random.PRNGKey(1), (8, 4)),
+                "b": jax.random.normal(jax.random.PRNGKey(2), (3, 8)),
+                "c": jax.random.normal(jax.random.PRNGKey(3), (5,))}
+
+        def body(tree):
+            gathered = all_gather_params(tree, specs)
+            # pretend each data-rank contributed gradient == gathered params:
+            # the reduce-scattered sum must equal 4 * full, re-sharded
+            back = reduce_scatter_tree(gathered, specs, reduce_axes=("data",))
+            return jax.tree.map(lambda g, t: jnp.abs(g - 4.0 * t).max()[None], back, tree)
+        g = jax.jit(shard_map(body, mesh2, in_specs=(specs,), out_specs=P(None)))
+        errs = g(full)
+        m = max(float(v.max()) for v in jax.tree.leaves(errs))
+        assert m < 1e-5, m
+        print("OK")
+        """
+    )
+    assert "OK" in out
+
+
+@pytest.mark.slow
 def test_allocation_invariance_of_update():
     """Paper eq. 1: the SAME global batch split differently across ranks gives
     the SAME parameter update (convergence is allocation-independent)."""
@@ -94,9 +197,6 @@ def test_allocation_invariance_of_update():
         cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
                           n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=101,
                           compute_dtype="float32", remat=False)
-        scfg = HeteroStepConfig(w_max=4, micro_bs=4, seq_len=16, mode="while", alloc_axis="data")
-        step = build_train_step(cfg, scfg, mesh)
-        state = init_train_state(cfg, scfg, jax.random.PRNGKey(0))
         R, W, mb, S = 4, 4, 4, 16
         # 8 microbatches of real data, two different placements
         data = jax.random.randint(jax.random.PRNGKey(5), (8, mb, S), 0, 101)
@@ -113,14 +213,19 @@ def test_allocation_invariance_of_update():
                     k += 1
             return {"inputs": xi, "targets": yi, "alloc": jnp.array(alloc, jnp.int32)}
 
-        b1 = place(list(range(8)), [2, 2, 2, 2])   # equal allocation
-        b2 = place(list(range(8)), [1, 2, 2, 3])   # skewed allocation
-        s1, m1 = step(jax.tree.map(lambda x: x.copy(), state), b1)
-        s2, m2 = step(jax.tree.map(lambda x: x.copy(), state), b2)
-        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-6)
-        d = max(jax.tree.leaves(jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
-                                             s1["params"], s2["params"])))
-        assert d < 1e-5, d
+        for fsdp in (False, "gather"):  # replicated AND ZeRO gather-mode
+            scfg = HeteroStepConfig(w_max=4, micro_bs=4, seq_len=16, mode="while",
+                                    alloc_axis="data", fsdp=fsdp)
+            step = build_train_step(cfg, scfg, mesh)
+            state = init_train_state(cfg, scfg, jax.random.PRNGKey(0))
+            b1 = place(list(range(8)), [2, 2, 2, 2])   # equal allocation
+            b2 = place(list(range(8)), [1, 2, 2, 3])   # skewed allocation
+            s1, m1 = step(jax.tree.map(lambda x: x.copy(), state), b1)
+            s2, m2 = step(jax.tree.map(lambda x: x.copy(), state), b2)
+            np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-6)
+            d = max(jax.tree.leaves(jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                                                 s1["params"], s2["params"])))
+            assert d < 1e-5, (fsdp, d)
         print("OK")
         """
     )
@@ -168,6 +273,9 @@ def test_while_mode_fsdp_over_alloc_axis_rejected():
             print("NO-ERROR")
         except ValueError as e:
             assert "deadlock" in str(e)
+            # ... but the uniform-collective gather mode IS legal on the same mesh
+            HeteroStepConfig(w_max=2, micro_bs=2, seq_len=8, mode="while",
+                             alloc_axis="data", fsdp="gather").validate(mesh)
             print("OK")
         """
     )
@@ -177,6 +285,97 @@ def test_while_mode_fsdp_over_alloc_axis_rejected():
 # ---------------------------------------------------------------------------
 # single-device dist pieces
 # ---------------------------------------------------------------------------
+
+
+def test_step_config_rejects_bad_fsdp_combinations():
+    from repro.dist import HeteroStepConfig
+
+    with pytest.raises(ValueError, match="gather"):
+        HeteroStepConfig(w_max=2, micro_bs=2, seq_len=8, mode="masked", fsdp="gather")
+    with pytest.raises(ValueError, match="fsdp"):
+        HeteroStepConfig(w_max=2, micro_bs=2, seq_len=8, fsdp="zero3")
+
+
+def test_build_train_step_rejects_alloc_over_w_max():
+    """The while body clamps alloc to W silently; the host-side guard must
+    turn that into a loud error before any microbatch is dropped."""
+    import jax.numpy as jnp
+
+    from repro.configs import smoke_config
+    from repro.dist import HeteroStepConfig, build_train_step, init_train_state
+    from repro.launch.mesh import make_test_mesh
+
+    cfg = smoke_config("smollm-360m", seq=16)
+    scfg = HeteroStepConfig(w_max=2, micro_bs=2, seq_len=16, mode="masked")
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    step = build_train_step(cfg, scfg, mesh)
+    state = init_train_state(cfg, scfg, jax.random.PRNGKey(0))
+    batch = {
+        "inputs": jnp.zeros((2, 2, 2, 16), jnp.int32),
+        "targets": jnp.zeros((2, 2, 2, 16), jnp.int32),
+        "alloc": jnp.array([3, 1], jnp.int32),  # 3 > w_max=2
+    }
+    with pytest.raises(ValueError, match="w_max"):
+        step(state, batch)
+    # the guard must also cover eager jit=False callers (same silent clamp)
+    raw_step = build_train_step(cfg, scfg, mesh, jit=False)
+    with pytest.raises(ValueError, match="w_max"):
+        raw_step(state, batch)
+
+
+def test_serving_cells_report_param_state_bytes():
+    """dryrun's `state GB/dev` column must be non-zero for prefill/decode
+    cells too (their persistent state is the sharded param tree)."""
+    from repro.launch.mesh import make_test_mesh
+    from repro.launch.specs import plan_cell
+
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    plan = plan_cell("smollm-360m", "decode_32k", mesh)
+    assert plan.kind == "decode"
+    # unsharded 1x1 mesh: per-device bytes == full fp32 param bytes
+    assert plan.state_bytes_per_dev > 100e6
+
+
+def test_state_specs_memory_accounting():
+    """fsdp state sharding: per-device params+opt bytes must drop to ~1/N on
+    an N-way mesh (modulo the replicated norm gains / scalars)."""
+    from repro.configs import get_config
+    from repro.dist import state_specs
+    from repro.models import transformer
+    from repro.optim import AdamWConfig, adamw_init
+
+    cfg = get_config("gemma-7b")
+    state = jax.eval_shape(
+        lambda k: {
+            "params": transformer.init_params(cfg, k),
+            "opt": adamw_init(jax.eval_shape(lambda q: transformer.init_params(cfg, q), k), AdamWConfig()),
+            "step": jnp.zeros((), jnp.int32),
+        },
+        jax.random.PRNGKey(0),
+    )
+
+    class FakeMesh:
+        shape = {"data": 8, "model": 1}
+        axis_names = ("data", "model")
+
+    def tree_bytes(shapes, specs):
+        def leaf(x, s):
+            shards = 1
+            for entry in tuple(s):
+                for ax in (entry if isinstance(entry, tuple) else (entry,)) if entry else ():
+                    shards *= FakeMesh.shape[ax]
+            return x.size * x.dtype.itemsize // shards
+
+        return sum(jax.tree.leaves(jax.tree.map(leaf, shapes, specs)))
+
+    replicated = tree_bytes(state, jax.tree.map(lambda _: jax.sharding.PartitionSpec(), state))
+    specs = state_specs(state, FakeMesh(), fsdp=True, fsdp_axes=("data",))
+    sharded = tree_bytes(state, specs)
+    # acceptance: <= ~1/8 of full state (+ slack for unsharded 0/1-D leaves)
+    assert sharded <= replicated / 8 * 1.05, (sharded, replicated)
+    # moments are sharded identically to params (ZeRO), not left replicated
+    assert specs["opt"]["mu"] == specs["params"]
+    assert specs["opt"]["nu"] == specs["params"]
 
 
 def test_grad_compression_error_feedback():

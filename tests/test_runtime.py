@@ -37,6 +37,41 @@ def test_straggler_monitor_flags_persistent():
     assert mon.imbalance() > 0.5
 
 
+def test_straggler_monitor_stable_heterogeneous_fleet_not_flagged():
+    """Regression: z-scoring against the GLOBAL mean flagged a constant 3x
+    slower GTX in a V100 fleet forever.  Per-worker baselines must produce
+    ZERO flags for any constant fleet, however skewed."""
+    mon = StragglerMonitor(4, window=8, z_threshold=2.5)
+    for _ in range(12):
+        assert mon.observe(np.array([1.0, 1.0, 1.0, 3.0])) == []
+    # ... while a genuine slowdown OF the slow worker still flags
+    flags = mon.observe(np.array([1.0, 1.0, 1.0, 9.0]))
+    assert [f.worker for f in flags] == [3]
+
+
+def test_straggler_monitor_tolerates_jitter():
+    """2% lognormal jitter (SimulatedTimingSource's default sigma) must never
+    flag at the default threshold — on ANY epoch, including right after the
+    short warmup baseline."""
+    rng = np.random.default_rng(0)
+    mon = StragglerMonitor(2, window=8, z_threshold=2.5)
+    base = np.array([1.0, 2.5])
+    for _ in range(40):
+        flags = mon.observe(base * rng.lognormal(sigma=0.02, size=2))
+        assert flags == []
+
+
+def test_straggler_slowdown_stays_flagged_not_absorbed():
+    """A degraded worker must not redefine its own baseline: the flag
+    persists instead of fading as the slowdown fills the window."""
+    mon = StragglerMonitor(2, window=4, z_threshold=2.0)
+    flags = []
+    for i in range(12):
+        flags = mon.observe(np.array([1.0, 1.0 if i < 6 else 4.0]))
+    assert [f.worker for f in flags] == [1]
+    assert flags[0].persistent
+
+
 def test_elastic_remove_rebalances_with_carried_speeds():
     ctl = AdaptiveAllocationController(ControllerConfig(total=40, n_workers=4, ema_beta=0.0))
     speeds = np.array([1.0, 1.0, 2.0, 4.0])
@@ -84,3 +119,26 @@ def test_timing_sources():
     assert out.shape == (2,) and np.all(out > 0)
     with pytest.raises(RuntimeError):
         m.stop(0)  # stop without start
+
+
+def test_measured_timing_overlapping_rank_windows():
+    """Regression: one shared _start meant start(0); start(1); stop(0) timed
+    rank 0 from rank 1's start.  Per-rank timestamps keep overlapping
+    windows independent."""
+    ticks = iter([0.0, 1.0, 3.0, 6.0])
+    m = MeasuredTimingSource(2, clock=lambda: next(ticks))
+    m.start(0)  # t=0
+    m.start(1)  # t=1
+    m.stop(0)  # t=3: rank 0 ran 3s (NOT 2s from rank 1's start)
+    m.stop(1)  # t=6: rank 1 ran 5s
+    np.testing.assert_allclose(m.epoch_times(), [3.0, 5.0])
+
+
+def test_measured_timing_double_start_same_rank():
+    # a second start(r) restarts rank r's window; stop uses the newest
+    ticks = iter([0.0, 10.0, 11.0])
+    m = MeasuredTimingSource(1, clock=lambda: next(ticks))
+    m.start(0)
+    m.start(0)
+    m.stop(0)
+    np.testing.assert_allclose(m.epoch_times(), [1.0])

@@ -10,6 +10,55 @@ import pytest
 from repro.launch import train as train_cli
 
 
+def test_static_policy_without_ratio_is_an_error():
+    """Regression: --policy static with no --static-ratio silently fell
+    through to the controller's equal allocation."""
+    with pytest.raises(SystemExit):
+        train_cli.parse_args(["--arch", "smollm-360m", "--policy", "static"])
+    # the combination that works
+    args = train_cli.parse_args(
+        ["--arch", "smollm-360m", "--policy", "static", "--static-ratio", "6,4"]
+    )
+    assert args.static_ratio == "6,4"
+
+
+def test_fsdp_gather_requires_while_mode_cli():
+    with pytest.raises(SystemExit):
+        train_cli.parse_args(["--arch", "smollm-360m", "--fsdp", "gather", "--mode", "masked"])
+
+
+@pytest.mark.slow
+def test_static_resume_preserves_allocation(tmp_path):
+    """Regression: --resume restored the controller and overwrote the static
+    allocation with the controller's equal split."""
+    common = [
+        "--arch", "smollm-360m", "--smoke", "--n-workers", "2",
+        "--total-micro", "4", "--micro-bs", "1", "--seq", "16",
+        "--policy", "static", "--static-ratio", "3,1",
+        "--ckpt-dir", str(tmp_path / "ck"), "--ckpt-every", "3",
+    ]
+    first = train_cli.main(common + ["--steps", "3"])
+    assert first["final_allocation"] == [3, 1]
+    resumed = train_cli.main(common + ["--steps", "6", "--resume"])
+    assert resumed["final_allocation"] == [3, 1]
+
+
+@pytest.mark.slow
+def test_train_cli_while_gather_mode(tmp_path):
+    """End-to-end CLI smoke of the ZeRO path: --mode while --fsdp gather."""
+    res = train_cli.main(
+        [
+            "--arch", "smollm-360m", "--smoke", "--steps", "6",
+            "--n-workers", "2", "--total-micro", "4", "--micro-bs", "1",
+            "--seq", "16", "--mode", "while", "--fsdp", "gather",
+            "--json-out", str(tmp_path / "out.json"),
+        ]
+    )
+    assert res["steps"] == 6
+    assert res["last_loss"] == res["last_loss"]  # finite, no NaN
+    assert res["last_loss"] < res["first_loss"] * 1.5  # sane magnitude
+
+
 @pytest.mark.slow
 def test_end_to_end_adaptive_training_loss_drops(tmp_path):
     """Full loop: synthetic data -> hetero step -> controller -> loss drops and
