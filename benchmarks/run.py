@@ -9,6 +9,13 @@ Prints ``name,us_per_call,derived`` CSV.  Sections:
     dry-run env and therefore runs as its own process).
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only substring]
+       PYTHONPATH=src python -m benchmarks.run --scenario elastic
+
+``--scenario elastic`` runs the fig. 11 membership experiment END-TO-END
+through the elastic driver (real training steps, simulated speeds): a
+weak-card fleet trains, the weak card is replaced by a V100 mid-run, and
+the per-epoch time must drop.  Emits one ``BENCH {...}`` json line and
+writes it to ``--json-out`` (default results/bench_elastic.json).
 """
 
 from __future__ import annotations
@@ -40,11 +47,77 @@ def _roofline_rows() -> list[tuple]:
     return rows
 
 
+def run_elastic_scenario(json_out: str | None, steps: int = 48) -> dict:
+    """Fig. 11 through the real driver: replace the weak card, time drops.
+
+    Returns (and BENCH-prints) per-epoch times split at the replacement
+    event; ``improvement`` is the relative drop of the mean per-aggregation
+    makespan once the V100 is in the fleet.
+    """
+    from repro.runtime.driver import DriverConfig, ElasticTrainer
+
+    replace_at = steps // 2
+    cfg = DriverConfig(
+        arch="smollm-360m",
+        smoke=True,
+        steps=steps,
+        seq=16,
+        micro_bs=1,
+        total_micro=12,
+        n_workers=3,
+        hetero_gpus="rtx2080ti,rtx2080ti,gtx1080ti",  # fleet with one weak card
+        steps_per_epoch=4,
+        policy="adaptive",
+        events=f"replace@{replace_at}:2=v100",  # fig. 11: weak -> strong
+        seed=0,
+        verbose=False,
+    )
+    res = ElasticTrainer(cfg).run()
+    pre = [e["agg_s"] for e in res["epoch_log"] if "v100" not in e["gpus"]]
+    post = [e["agg_s"] for e in res["epoch_log"] if "v100" in e["gpus"]]
+    bench = {
+        "scenario": "elastic",
+        "arch": res["arch"],
+        "steps": res["steps"],
+        "replace_at_step": replace_at,
+        "fleet_before": ["rtx2080ti", "rtx2080ti", "gtx1080ti"],
+        "fleet_after": res["gpus"],
+        "final_allocation": res["final_allocation"],
+        "last_loss": res["last_loss"],
+        "epoch_log": res["epoch_log"],
+        "pre_replace_agg_s": pre,
+        "post_replace_agg_s": post,
+        "pre_mean_s": float(sum(pre) / len(pre)) if pre else None,
+        "post_mean_s": float(sum(post) / len(post)) if post else None,
+        "improvement": (
+            float(1.0 - (sum(post) / len(post)) / (sum(pre) / len(pre))) if pre and post else None
+        ),
+    }
+    print("BENCH " + json.dumps(bench))
+    if json_out:
+        os.makedirs(os.path.dirname(json_out) or ".", exist_ok=True)
+        with open(json_out, "w") as f:
+            json.dump(bench, f, indent=1)
+    return bench
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="run benches whose name contains this")
     ap.add_argument("--skip-paper", action="store_true")
+    ap.add_argument(
+        "--scenario",
+        default=None,
+        choices=["elastic"],
+        help="run one end-to-end scenario (emits a BENCH json line) instead of the CSV benches",
+    )
+    ap.add_argument("--json-out", default=None, help="scenario json path (default results/bench_<scenario>.json)")
     args = ap.parse_args()
+
+    if args.scenario == "elastic":
+        out = args.json_out or os.path.join(os.path.dirname(__file__), "..", "results", "bench_elastic.json")
+        run_elastic_scenario(out)
+        return
 
     from benchmarks import bench_kernels, paper_figs
 

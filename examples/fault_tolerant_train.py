@@ -1,68 +1,51 @@
-"""Fault tolerance demo: checkpoint -> crash -> resume -> worker failure ->
-elastic rebalance.
+"""Fault tolerance demo on the real elastic driver: worker failure ->
+detector-driven rescale -> crash -> exact resume -> fleet upgrade.
 
     PYTHONPATH=src python examples/fault_tolerant_train.py
 
-The training state bundle (params + optimizer + allocation-controller state)
-survives a hard stop; after resume, a simulated worker failure triggers the
-elastic coordinator, which re-partitions the paper's allocation over the
-survivors using their measured speeds.
+One scripted membership schedule drives the whole story (paper fig. 11):
+worker 3 stops heartbeating at step 6 (the FailureDetector declares it dead
+and the coordinator re-partitions over the survivors with their measured
+speeds), a V100 joins at step 18, and the remaining weak card is swapped
+for a V100 at step 26.  The run is killed between the events; ``--resume``
+continues from the checkpoint — same data position, same fleet, same
+allocation — instead of replaying epoch 0.
 """
 
-import json
 import tempfile
 
-import numpy as np
-
-from repro.checkpoint import CheckpointManager
-from repro.core import AdaptiveAllocationController, ClusterSpec, ControllerConfig
 from repro.launch import train as train_cli
-from repro.runtime import ElasticCoordinator, FailureDetector
+
+EVENTS = "fail@6:3,add@18:v100,replace@26:2=v100"
 
 
 def main():
     with tempfile.TemporaryDirectory() as ckdir:
         common = [
             "--arch", "smollm-360m", "--smoke", "--n-workers", "4",
-            "--total-micro", "8", "--micro-bs", "2", "--seq", "32",
+            "--total-micro", "12", "--micro-bs", "1", "--seq", "16",
             "--hetero-gpus", "v100,rtx2080ti,rtx2080ti,gtx1080ti",
-            "--ckpt-dir", ckdir, "--ckpt-every", "10",
+            "--events", EVENTS,
+            "--ckpt-dir", ckdir, "--ckpt-every", "8",
         ]
-        print("=== phase 1: train 20 steps, checkpointing every 10 ===")
-        train_cli.main(common + ["--steps", "20"])
-
-        print("\n=== phase 2: 'crash' happened; resume from the checkpoint ===")
-        res = train_cli.main(common + ["--steps", "30", "--resume"])
-        print(f"resumed to step {res['steps']}, allocation {res['final_allocation']}")
-
-        print("\n=== phase 3: worker 3 dies; elastic rebalance over survivors ===")
-        mgr = CheckpointManager(ckdir)
-        # restore the controller exactly as training left it
-        import jax, jax.numpy as jnp  # noqa: E401
-        from repro.configs import smoke_config
-        from repro.dist import HeteroStepConfig, init_train_state
-
-        cfg = smoke_config("smollm-360m", seq=32)
-        scfg = HeteroStepConfig(w_max=4, micro_bs=2, seq_len=32, mode="masked")
-        like = init_train_state(cfg, scfg, jax.random.PRNGKey(0))
-        step, state, meta = mgr.restore(like)
-        ctl = AdaptiveAllocationController.from_state_dict(json.loads(meta["controller"]))
-        print(f"restored step {step}; allocation {ctl.allocation.tolist()}")
-
-        fd = FailureDetector(4, patience=2)
-        fd.tick()  # interval 1: nobody has reported yet
-        for w in (0, 1, 2):
-            fd.heartbeat(w)  # workers 0-2 report; worker 3 stays silent
-        dead = fd.tick()  # worker 3 missed two intervals -> declared dead
-        print(f"failure detector: dead workers {dead}")
-
-        coord = ElasticCoordinator(ctl)
-        plan = coord.remove(dead, restore_step=step)
+        print("=== phase 1: train 14 steps; worker 3 fails at step 6 ===")
+        res1 = train_cli.main(common + ["--steps", "14"])
         print(
-            f"rescale plan: survivors {plan.survivors}, new allocation "
-            f"{plan.allocation.tolist()} (sum preserved: {plan.allocation.sum()}), "
-            f"resume from step {plan.restore_step}"
+            f"\nphase 1 ended at step {res1['steps']} (epoch {res1['epoch']}, "
+            f"agg {res1['agg_index']}) with fleet {res1['gpus']} — then the host 'crashes'"
         )
+
+        print("\n=== phase 2: resume with the SAME schedule; fleet upgrades mid-run ===")
+        res2 = train_cli.main(common + ["--steps", "34", "--resume"])
+        print(f"\nresumed to step {res2['steps']}, final fleet {res2['gpus']}")
+        print(f"final allocation {res2['final_allocation']} (sums to C=12)")
+        for m in res2["memberships"]:
+            print(f"  membership change at step {m['step']}: {m['event']} -> "
+                  f"{m['gpus']} alloc {m['allocation']}")
+        times = [e["agg_s"] for e in res2["epoch_log"]]
+        if times:
+            print(f"per-aggregation time: first epoch {times[0]:.3f}s -> last epoch "
+                  f"{times[-1]:.3f}s (fleet got stronger, time dropped)")
 
 
 if __name__ == "__main__":

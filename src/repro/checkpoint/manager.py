@@ -1,10 +1,11 @@
 """Checkpoint lifecycle: retention, auto-resume, training-state bundling.
 
 Bundles model params + optimizer state + the allocation controller's
-state_dict + data-epoch position, so a restart resumes *both* the model and
-the paper's adaptive allocation where they left off (a controller reset
-would re-run the 4–5 adaptation epochs after every failure — measured in
-benchmarks/bench_fault.py).
+state_dict + data-epoch position (the elastic driver's metadata carries
+epoch, aggregation index and fleet membership), so a restart resumes *both*
+the model and the paper's adaptive allocation where they left off (a
+controller reset would re-run the 4–5 adaptation epochs after every
+failure — measured by ``python -m benchmarks.run --scenario elastic``).
 """
 
 from __future__ import annotations
@@ -51,8 +52,13 @@ class CheckpointManager:
         self._gc()
         return path
 
+    def is_due(self, step: int) -> bool:
+        """Single source of truth for the periodic-save cadence; callers that
+        build metadata lazily should gate on this instead of re-deriving it."""
+        return step % self.save_every == 0 and step > 0
+
     def save_if_due(self, step: int, state: Any, metadata: dict | None = None) -> str | None:
-        if step % self.save_every == 0 and step > 0:
+        if self.is_due(step):
             return self.save(step, state, metadata)
         return None
 

@@ -194,9 +194,27 @@ class AdaptiveAllocationController:
             w0 = alloc_lib.equal_allocation(n_workers, cfg.total)
         self.config = dataclasses.replace(cfg, n_workers=n_workers)
         self._s = _State(w=w0)
+        # Rebase the timing log onto the new membership: stale old-length
+        # entries would make the NEXT membership change read len(n_old)
+        # speeds (ElasticCoordinator indexes log[-1].speeds with new-world
+        # ids — a misindex or crash).  Carried speeds become one synthetic
+        # observation so a second rescale still warm-starts.
+        self.log = TimingLog()
+        if carry_speeds is not None:
+            # the synthetic alloc uses max(w0,1): with w_min=0 a zero-share
+            # worker would otherwise read back speed 0 (= alloc/t_s) and the
+            # positivity gate in ElasticCoordinator._speeds would throw away
+            # ALL carried speeds on the next rescale
+            w_syn = np.maximum(w0, 1)
+            self.log.append(EpochTiming(epoch=0, alloc=w_syn, t_s=w_syn / v, t_c=0.0))
         return self.allocation
 
     # -- checkpointing ---------------------------------------------------------
+
+    # Entries of the timing log bundled into state_dict: enough for the
+    # elastic coordinator's warm start (it reads log[-1].speeds) plus context
+    # for post-restore monitoring, without growing checkpoints with the run.
+    LOG_TAIL = 8
 
     def state_dict(self) -> dict:
         return {
@@ -207,6 +225,9 @@ class AdaptiveAllocationController:
             "drift_count": self._s.drift_count,
             "t_s_ema": None if self._s.t_s_ema is None else self._s.t_s_ema.tolist(),
             "config": dataclasses.asdict(self.config),
+            # without this, every post-restart membership change fell back to
+            # a cold equal allocation (ElasticCoordinator._speeds() -> None)
+            "log_tail": [r.to_dict() for r in self.log.records[-self.LOG_TAIL :]],
         }
 
     @classmethod
@@ -218,4 +239,6 @@ class AdaptiveAllocationController:
         ctl._s.stable_count = state["stable_count"]
         ctl._s.drift_count = state["drift_count"]
         ctl._s.t_s_ema = None if state["t_s_ema"] is None else np.asarray(state["t_s_ema"])
+        for rec in state.get("log_tail", []):
+            ctl.log.append(EpochTiming.from_dict(rec))
         return ctl

@@ -21,6 +21,7 @@ import numpy as np
 
 __all__ = [
     "GPU_RELATIVE_THROUGHPUT",
+    "normalize_gpu",
     "StragglerEvent",
     "WorkerSpeed",
     "ClusterSpec",
@@ -42,6 +43,16 @@ GPU_RELATIVE_THROUGHPUT: Mapping[str, float] = {
     "tpu_v5e": 4.3,
     "tpu_v5p": 10.0,
 }
+
+
+def normalize_gpu(name: str) -> str:
+    """Canonical GPU key for the throughput table; raises on typos.  The one
+    normalization rule shared by cluster construction, the elastic event
+    grammar, and the driver's fleet flags."""
+    key = name.strip().lower().replace(" ", "")
+    if key not in GPU_RELATIVE_THROUGHPUT:
+        raise ValueError(f"unknown GPU {name!r}; known: {sorted(GPU_RELATIVE_THROUGHPUT)}")
+    return key
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,9 +147,7 @@ class ClusterSpec:
         """
         workers = []
         for i, g in enumerate(gpus):
-            key = g.lower().replace(" ", "")
-            if key not in GPU_RELATIVE_THROUGHPUT:
-                raise KeyError(f"unknown GPU {g!r}; known: {sorted(GPU_RELATIVE_THROUGHPUT)}")
+            key = normalize_gpu(g)
             workers.append(
                 WorkerSpeed(
                     name=f"{key}:{i}",

@@ -52,6 +52,25 @@ class EpochTiming:
         mx = float(np.max(self.t_s))
         return 0.0 if mx == 0 else float((mx - np.min(self.t_s)) / mx)
 
+    # -- checkpoint serialization (controller state_dict bundles a log tail) --
+
+    def to_dict(self) -> dict:
+        return {
+            "epoch": int(self.epoch),
+            "alloc": np.asarray(self.alloc).tolist(),
+            "t_s": np.asarray(self.t_s).tolist(),
+            "t_c": float(self.t_c),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "EpochTiming":
+        return cls(
+            epoch=int(d["epoch"]),
+            alloc=np.asarray(d["alloc"], dtype=np.int64),
+            t_s=np.asarray(d["t_s"], dtype=np.float64),
+            t_c=float(d["t_c"]),
+        )
+
 
 @dataclasses.dataclass
 class TimingLog:

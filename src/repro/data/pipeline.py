@@ -41,21 +41,28 @@ class HeteroBatcher:
         self.w_max = w_max
         self.sampler = ProportionalSampler(len(dataset), micro_batch, seed=seed)
 
-    def epoch(self, epoch: int, alloc: np.ndarray) -> Iterator[dict[str, np.ndarray]]:
+    def epoch(self, epoch: int, alloc: np.ndarray, start: int = 0) -> Iterator[dict[str, np.ndarray]]:
         """Yield one dict per aggregation (global step).
 
         The final aggregation of an epoch may be PARTIAL (the sampler splits
         the dataset tail proportionally rather than dropping it), so each
         yielded ``alloc`` is derived from that aggregation's actual shares —
         a rank may even get 0 microbatches in the last step of an epoch.
+
+        ``start`` skips the first ``start`` aggregations without assembling
+        their batches — how a resumed run fast-forwards to its checkpointed
+        position inside an epoch instead of replaying (or re-materializing)
+        data it already trained on.
         """
         alloc = np.asarray(alloc, dtype=np.int32)
         if alloc.max() > self.w_max:
             raise ValueError(f"allocation {alloc.max()} exceeds W_max={self.w_max}")
         plan = self.sampler.epoch_plan(epoch, alloc)
         n_agg = len(plan[0])
+        if start < 0 or start > n_agg:
+            raise ValueError(f"start={start} outside this epoch's {n_agg} aggregations")
         S = self.dataset.seq_len
-        for a in range(n_agg):
+        for a in range(start, n_agg):
             inputs = np.zeros((self.n_ranks, self.w_max, self.micro_batch, S), np.int32)
             targets = np.zeros_like(inputs)
             alloc_a = np.array([len(plan[i][a]) // self.micro_batch for i in range(self.n_ranks)], np.int32)

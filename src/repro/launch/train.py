@@ -1,15 +1,22 @@
-"""End-to-end training driver with adaptive task allocation.
+"""Training CLI — a thin argparse shim over :class:`repro.runtime.driver.ElasticTrainer`.
 
-This is the CPU-runnable production loop: the same controller / sampler /
-step code the multi-pod deployment uses, at whatever scale the host has.
-Heterogeneity is simulated (``--hetero-gpus``) because this container is a
-single CPU; on a real mixed fleet the MeasuredTimingSource replaces the
-simulated one (one line in ``_timing_source``).
+The driver is the CPU-runnable production loop: the same controller /
+sampler / step code the multi-pod deployment uses, at whatever scale the
+host has.  Timing is MEASURED (per-step wall clocks) by default, so the
+self-adaptive loop runs on real numbers; ``--hetero-gpus`` swaps in the
+simulated speed model because this container is a single CPU.
 
-Examples:
+Membership changes (paper fig. 11) are scripted with ``--events``:
+
   PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --smoke \
-      --steps 50 --n-workers 4 --hetero-gpus v100,rtx2080ti,rtx2080ti,gtx1080ti
-  PYTHONPATH=src python -m repro.launch.train --arch olmoe-1b-7b --smoke --policy equal
+      --steps 30 --events "fail@8:3,add@16:v100,replace@24:0=v100" \
+      --ckpt-dir /tmp/el
+
+Each event is ``kind@step:spec`` — ``fail@8:3`` (worker 3 stops
+heartbeating at step 8), ``add@16:v100`` (a V100 joins), ``replace@24:0=v100``
+(slot 0 swapped for a V100).  A killed run resumes exactly (same data
+position, same fleet, same allocation) with ``--resume`` plus the SAME
+``--events`` schedule.
 """
 
 from __future__ import annotations
@@ -17,26 +24,8 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.checkpoint import CheckpointManager
-from repro.configs import get_config, smoke_config
-from repro.core import (
-    AdaptiveAllocationController,
-    ClusterSpec,
-    ControllerConfig,
-    EpochTiming,
-    TimingLog,
-)
-from repro.data import HeteroBatcher, SyntheticLM
-from repro.dist import HeteroStepConfig, build_train_step, init_train_state
-from repro.launch.mesh import make_test_mesh
-from repro.optim import warmup_cosine
-from repro.runtime import SimulatedTimingSource
+from repro.runtime.driver import DriverConfig, ElasticTrainer
 
 
 def parse_args(argv=None):
@@ -48,7 +37,7 @@ def parse_args(argv=None):
     ap.add_argument("--n-workers", type=int, default=4, help="allocation ranks (DP groups)")
     ap.add_argument("--micro-bs", type=int, default=4)
     ap.add_argument("--total-micro", type=int, default=16, help="C: microbatches per step")
-    ap.add_argument("--w-max", type=int, default=0, help="buffer depth (0 -> 2*C/n)")
+    ap.add_argument("--w-max", type=int, default=0, help="buffer depth (0 -> 2*C/n, grown on demand)")
     ap.add_argument("--policy", default="adaptive", choices=["adaptive", "equal", "static"])
     ap.add_argument("--static-ratio", default=None, help="comma ints, e.g. 6,4 (required with --policy static)")
     ap.add_argument(
@@ -68,6 +57,13 @@ def parse_args(argv=None):
     )
     ap.add_argument("--hetero-gpus", default=None, help="comma GPU names for simulated speeds")
     ap.add_argument("--steps-per-epoch", type=int, default=4, help="aggregations per 'epoch' (controller cadence)")
+    ap.add_argument("--dataset-size", type=int, default=0, help="samples (0 -> C*micro_bs*steps_per_epoch)")
+    ap.add_argument(
+        "--events",
+        default=None,
+        help='membership schedule, e.g. "fail@8:3,add@16:v100,replace@24:0=v100"; '
+        "on --resume pass the SAME schedule (applied events are skipped)",
+    )
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
@@ -81,115 +77,42 @@ def parse_args(argv=None):
     if args.fsdp == "gather" and args.mode != "while":
         ap.error("--fsdp gather pairs with --mode while (one gather per step outside "
                  "the per-rank loops); masked mode has no gather to hoist")
+    if args.events:
+        from repro.runtime.elastic import parse_events
+
+        try:
+            parse_events(args.events)
+        except ValueError as e:
+            ap.error(str(e))
     return args
 
 
 def main(argv=None) -> dict:
     args = parse_args(argv)
-    cfg = smoke_config(args.arch, seq=args.seq) if args.smoke else get_config(args.arch)
-    n = args.n_workers
-    C = args.total_micro
-    w_max = args.w_max or max(2 * C // n, C // n + 1)
-
-    # --- mesh: data axis = allocation ranks (CPU: 1 device -> (1,1) mesh) ----
-    n_dev = len(jax.devices())
-    mesh = make_test_mesh((1, 1), ("data", "model")) if n_dev == 1 else make_test_mesh((n, 1), ("data", "model"))
-    spmd_ranks = mesh.shape["data"]
-
-    scfg = HeteroStepConfig(
-        w_max=w_max,
+    cfg = DriverConfig(
+        arch=args.arch,
+        smoke=args.smoke,
+        steps=args.steps,
+        seq=args.seq,
+        n_workers=args.n_workers,
         micro_bs=args.micro_bs,
-        seq_len=args.seq if args.smoke else cfg.max_seq,
-        mode=args.mode,  # masked runs everywhere incl. 1 device; while+gather = ZeRO path
-        alloc_axis="data",
-        fsdp="gather" if args.fsdp == "gather" else False,
-        fsdp_axes=("data",),
-        optimizer="adamw",
-    )
-    step = build_train_step(
-        cfg, scfg, mesh, lr_fn=warmup_cosine(args.lr, 10, args.steps), jit=True
-    )
-    state = init_train_state(cfg, scfg, jax.random.PRNGKey(args.seed))
-
-    # --- controller + simulated cluster --------------------------------------
-    gpus = (args.hetero_gpus or ",".join(["rtx2080ti"] * n)).split(",")
-    cluster = ClusterSpec.from_gpus(gpus, seed=args.seed)
-    timing = SimulatedTimingSource(cluster)
-    ctl = AdaptiveAllocationController(ControllerConfig(total=C, n_workers=n, w_min=1))
-    if args.policy == "static":
-        from repro.core import static_allocation
-
-        ratios = [float(x) for x in args.static_ratio.split(",")]
-        alloc = static_allocation(ratios, C)
-    else:
-        alloc = ctl.allocation
-
-    # --- data ----------------------------------------------------------------
-    dataset = SyntheticLM(
-        vocab_size=cfg.vocab_size,
-        seq_len=scfg.seq_len,
-        n_sequences=max(1024, C * args.micro_bs * 4),
+        total_micro=args.total_micro,
+        w_max=args.w_max,
+        policy=args.policy,
+        static_ratio=args.static_ratio,
+        mode=args.mode,
+        fsdp=args.fsdp,
+        hetero_gpus=args.hetero_gpus,
+        steps_per_epoch=args.steps_per_epoch,
+        dataset_size=args.dataset_size,
+        lr=args.lr,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+        resume=args.resume,
         seed=args.seed,
+        events=args.events,
     )
-    batcher = HeteroBatcher(dataset, n, args.micro_bs, w_max, seed=args.seed)
-
-    # --- checkpointing ---------------------------------------------------------
-    mgr = CheckpointManager(args.ckpt_dir, save_every=args.ckpt_every) if args.ckpt_dir else None
-    start_step = 0
-    if mgr and args.resume and mgr.latest_step() is not None:
-        start_step, state, meta = mgr.restore(state)
-        ctl = AdaptiveAllocationController.from_state_dict(json.loads(meta["controller"]))
-        if args.policy != "static":
-            # static policy keeps the --static-ratio allocation: the restored
-            # controller's (equal-by-default) allocation must not override it
-            alloc = ctl.allocation
-        print(f"[resume] step {start_step}, allocation {np.asarray(alloc).tolist()}")
-
-    # --- loop -------------------------------------------------------------------
-    losses, sim_epoch_times = [], TimingLog()
-    step_i = start_step
-    epoch = 0
-    t_wall = time.time()
-    while step_i < args.steps:
-        for batch_np in batcher.epoch(epoch, alloc):
-            if step_i >= args.steps:
-                break
-            # pad per-rank buffers into the SPMD layout (spmd_ranks may be 1)
-            batch = {
-                "inputs": jnp.asarray(batch_np["inputs"]),
-                "targets": jnp.asarray(batch_np["targets"]),
-                "alloc": jnp.asarray(batch_np["alloc"]),
-            }
-            state, metrics = step(state, batch)
-            losses.append(float(metrics["loss"]))
-            step_i += 1
-            if mgr:
-                meta = {"controller": json.dumps(ctl.state_dict())}
-                mgr.save_if_due(step_i, state, metadata=meta)
-            if step_i % 10 == 0 or step_i == 1:
-                print(
-                    f"step {step_i:5d} loss {losses[-1]:.4f} tokens {float(metrics['tokens']):.0f} "
-                    f"alloc {alloc.tolist()}",
-                    flush=True,
-                )
-        # end of epoch: simulated wall-clock + controller update
-        t_s = timing.epoch_times(alloc, epoch)
-        sim_epoch_times.append(EpochTiming(epoch=epoch, alloc=np.asarray(alloc), t_s=t_s, t_c=0.1))
-        if args.policy == "adaptive":
-            alloc = ctl.observe(t_s, t_c=0.1)
-        epoch += 1
-
-    result = {
-        "arch": cfg.name,
-        "steps": step_i,
-        "first_loss": losses[0] if losses else None,
-        "last_loss": losses[-1] if losses else None,
-        "loss_drop": (losses[0] - losses[-1]) if losses else None,
-        "final_allocation": np.asarray(alloc).tolist(),
-        "controller_frozen": ctl.frozen,
-        "sim_epoch_summary": sim_epoch_times.summary(),
-        "wall_s": round(time.time() - t_wall, 1),
-    }
+    result = ElasticTrainer(cfg).run()
     print(json.dumps(result, indent=1))
     if args.json_out:
         os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)

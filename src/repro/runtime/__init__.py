@@ -1,11 +1,38 @@
-from repro.runtime.elastic import ElasticCoordinator, FailureDetector, RescalePlan
-from repro.runtime.monitor import MeasuredTimingSource, SimulatedTimingSource, StragglerMonitor
+from repro.runtime.elastic import (
+    ElasticCoordinator,
+    FailureDetector,
+    MembershipEvent,
+    RescalePlan,
+    parse_events,
+)
+from repro.runtime.monitor import (
+    MeasuredTimingSource,
+    SimulatedTimingSource,
+    StragglerMonitor,
+    TimingSource,
+)
 
 __all__ = [
+    "DriverConfig",
+    "ElasticTrainer",
     "ElasticCoordinator",
     "FailureDetector",
+    "MembershipEvent",
     "RescalePlan",
+    "parse_events",
     "MeasuredTimingSource",
     "SimulatedTimingSource",
     "StragglerMonitor",
+    "TimingSource",
 ]
+
+
+def __getattr__(name):
+    # The driver pulls in jax + the full model/dist/launch stack; loading it
+    # lazily keeps `from repro.runtime import FailureDetector`-class imports
+    # (monitoring sidecars, unit tests) numpy-light.
+    if name in ("DriverConfig", "ElasticTrainer"):
+        from repro.runtime import driver
+
+        return getattr(driver, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -21,13 +21,21 @@ slice is a remove, a restored one a join — same code path.
 from __future__ import annotations
 
 import dataclasses
+import re
 from typing import Sequence
 
 import numpy as np
 
 from repro.core.controller import AdaptiveAllocationController
+from repro.core.hetero import normalize_gpu
 
-__all__ = ["FailureDetector", "RescalePlan", "ElasticCoordinator"]
+__all__ = [
+    "FailureDetector",
+    "RescalePlan",
+    "ElasticCoordinator",
+    "MembershipEvent",
+    "parse_events",
+]
 
 
 class FailureDetector:
@@ -35,16 +43,51 @@ class FailureDetector:
         self.patience = patience
         self._missed = np.zeros(n_workers, dtype=np.int64)
         self._alive = np.ones(n_workers, dtype=bool)
+        self._seen = np.zeros(n_workers, dtype=bool)  # heartbeats this interval
 
-    def heartbeat(self, worker: int) -> None:
+    @property
+    def n_workers(self) -> int:
+        return len(self._alive)
+
+    def heartbeat(self, worker: int) -> bool:
+        """Record a heartbeat; returns True when it REVIVES a declared-dead
+        worker (the caller should treat that as a rejoin request — before
+        this returned a value, a revived worker's heartbeats were silently
+        absorbed and it could never rejoin)."""
         self._missed[worker] = 0
+        self._seen[worker] = True
+        revived = not self._alive[worker]
+        self._alive[worker] = True
+        return bool(revived)
 
     def tick(self) -> list[int]:
-        """Advance one heartbeat interval; returns newly-dead worker ids."""
-        self._missed[self._alive] += 1
+        """Advance one heartbeat interval; returns newly-dead worker ids.
+
+        Only workers that did NOT heartbeat during the interval count a
+        miss — a worker that reported must never accrue one, or with
+        ``patience=1`` every tick would declare the whole fleet dead.
+        """
+        self._missed[self._alive & ~self._seen] += 1
+        self._seen[:] = False
         newly_dead = np.where(self._alive & (self._missed >= self.patience))[0]
         self._alive[newly_dead] = False
         return [int(i) for i in newly_dead]
+
+    def rescale(self, survivors: Sequence[int], n_new: int) -> None:
+        """Remap the detector onto a post-:class:`RescalePlan` membership.
+
+        Detector state is indexed by OLD membership ids; after a rescale the
+        coordinator renumbers workers to ``survivors`` order plus ``n_new``
+        joiners appended at the end.  Without this remap, heartbeats and
+        deadness land on the wrong workers after the first membership change.
+        Joiners start alive with a clean miss count.
+        """
+        idx = np.asarray(survivors, dtype=np.int64)
+        if idx.size and (idx.min() < 0 or idx.max() >= len(self._alive)):
+            raise ValueError(f"survivor ids {survivors} out of range for n={len(self._alive)}")
+        self._missed = np.concatenate([self._missed[idx], np.zeros(n_new, dtype=np.int64)])
+        self._alive = np.concatenate([self._alive[idx], np.ones(n_new, dtype=bool)])
+        self._seen = np.concatenate([self._seen[idx], np.zeros(n_new, dtype=bool)])
 
     @property
     def alive(self) -> np.ndarray:
@@ -67,7 +110,17 @@ class ElasticCoordinator:
         log = self.controller.log
         if len(log) == 0:
             return None
-        return log[-1].speeds
+        with np.errstate(divide="ignore", invalid="ignore"):  # gate below handles inf/nan
+            v = log[-1].speeds
+        # Defensive length/positivity/finiteness gate: a log entry from a
+        # previous membership (or a degenerate measurement — t_s of 0 reads
+        # back as infinite speed) must read as "no speed history" — cold
+        # equal start — never as indexable speeds for the wrong worker set.
+        # resize() rebases the log, so this only fires on logs mutated
+        # outside the controller.
+        if v.shape != (self.controller.config.n_workers,) or np.any(v <= 0) or not np.all(np.isfinite(v)):
+            return None
+        return v
 
     def remove(self, dead: Sequence[int], restore_step: int | None = None) -> RescalePlan:
         n_old = self.controller.config.n_workers
@@ -101,3 +154,77 @@ class ElasticCoordinator:
             carry = None
         alloc = self.controller.resize(n, carry_speeds=carry)
         return RescalePlan(survivors=list(range(n)), n_new=0, allocation=alloc, restore_step=None)
+
+
+# ---------------------------------------------------------------------------
+# scripted membership events (fig. 11 schedules for the elastic driver)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MembershipEvent:
+    """One scripted fleet change, applied at global step ``step``.
+
+    kind='fail'     worker ``index`` stops heartbeating (goes through the
+                    FailureDetector, not straight to the coordinator)
+    kind='add'      one worker of type ``gpu`` joins
+    kind='replace'  worker ``index`` is swapped for a ``gpu`` card
+
+    ``index`` refers to the membership CURRENT when the event fires — after
+    earlier rescales renumbered workers — exactly how an operator would name
+    a slot at that moment.
+    """
+
+    step: int
+    kind: str  # "fail" | "add" | "replace"
+    index: int | None = None
+    gpu: str | None = None
+
+    def __post_init__(self) -> None:
+        if self.kind not in ("fail", "add", "replace"):
+            raise ValueError(f"unknown event kind {self.kind!r}")
+        if self.step < 0:
+            raise ValueError("event step must be >= 0")
+        if self.kind in ("fail", "replace") and (self.index is None or self.index < 0):
+            raise ValueError(f"{self.kind} event needs a worker index")
+        if self.kind in ("add", "replace") and not self.gpu:
+            raise ValueError(f"{self.kind} event needs a GPU type")
+
+
+_EVENT_RE = re.compile(r"^(?P<kind>add|fail|replace)@(?P<step>\d+):(?P<spec>.+)$")
+
+
+def parse_events(schedule: str) -> list[MembershipEvent]:
+    """Parse ``--events "add@8:gtx1080ti,fail@16:2,replace@24:1=v100"``.
+
+    Comma-separated ``kind@step:spec`` terms where spec is a GPU type
+    (``add``), a worker index (``fail``) or ``index=gpu`` (``replace``).
+    Returned sorted by step (stable, so same-step events keep written
+    order).  GPU names are validated against the known throughput table so a
+    typo fails at parse time, not 24 steps into the run.
+    """
+    events: list[MembershipEvent] = []
+    for term in schedule.split(","):
+        term = term.strip()
+        if not term:
+            continue
+        m = _EVENT_RE.match(term)
+        if not m:
+            raise ValueError(
+                f"bad event {term!r}: expected kind@step:spec with kind in add/fail/replace"
+            )
+        kind, step, spec = m.group("kind"), int(m.group("step")), m.group("spec")
+        if kind == "add":
+            events.append(MembershipEvent(step=step, kind="add", gpu=normalize_gpu(spec)))
+        elif kind == "fail":
+            if not spec.isdigit():
+                raise ValueError(f"bad event {term!r}: fail takes a worker index")
+            events.append(MembershipEvent(step=step, kind="fail", index=int(spec)))
+        else:  # replace
+            idx, sep, gpu = spec.partition("=")
+            if not sep or not idx.isdigit():
+                raise ValueError(f"bad event {term!r}: replace takes index=gpu")
+            events.append(
+                MembershipEvent(step=step, kind="replace", index=int(idx), gpu=normalize_gpu(gpu))
+            )
+    return sorted(events, key=lambda e: e.step)

@@ -22,24 +22,61 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Callable, Sequence
+from typing import Callable, Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
 from repro.core.hetero import ClusterSpec
 
-__all__ = ["SimulatedTimingSource", "MeasuredTimingSource", "StragglerMonitor"]
+__all__ = ["TimingSource", "SimulatedTimingSource", "MeasuredTimingSource", "StragglerMonitor"]
+
+
+@runtime_checkable
+class TimingSource(Protocol):
+    """What the elastic driver feeds the controller: one t_s vector per epoch.
+
+    ``record_step`` is called once per global step with the step's wall time
+    and allocation; ``epoch_times`` drains the accumulated epoch measurement.
+    ``ready`` says whether every rank has reported compute time; ``reset``
+    discards a partial accumulation (e.g. an epoch the driver decides not to
+    measure) so it cannot leak into the next epoch's reading.  Whether the
+    accumulation COVERS the whole epoch is the driver's call — a source only
+    sees the steps it was fed.
+    """
+
+    def record_step(self, wall_s: float, alloc: Sequence[int]) -> None: ...
+
+    def epoch_times(self, alloc: Sequence[int], epoch: int) -> np.ndarray: ...
+
+    def reset(self) -> None: ...
+
+    @property
+    def ready(self) -> bool: ...
 
 
 class SimulatedTimingSource:
-    """t_s from a ClusterSpec speed model (validation mode)."""
+    """t_s from a ClusterSpec speed model (validation mode).
+
+    Times are derived from the speed model, not measured, so ``record_step``
+    is a no-op and the source is always ``ready``.
+    """
 
     def __init__(self, cluster: ClusterSpec, jitter: bool = True) -> None:
         self.cluster = cluster
         self.jitter = jitter
 
+    def record_step(self, wall_s: float, alloc: Sequence[int]) -> None:
+        del wall_s, alloc  # model-derived: nothing to accumulate
+
     def epoch_times(self, alloc: Sequence[int], epoch: int) -> np.ndarray:
         return self.cluster.compute_times(np.asarray(alloc), epoch, jitter=self.jitter)
+
+    def reset(self) -> None:
+        pass  # nothing accumulated
+
+    @property
+    def ready(self) -> bool:
+        return True
 
 
 class MeasuredTimingSource:
@@ -69,6 +106,35 @@ class MeasuredTimingSource:
         if t0 is None:
             raise RuntimeError("stop() before start()")
         self._acc[rank] += self._clock() - t0
+
+    def record_step(self, wall_s: float, alloc: Sequence[int]) -> None:
+        """Credit one SPMD step's wall time to the ranks, weighted by the
+        microbatches each computed.
+
+        This is the single-process attribution: one host runs every rank in
+        one fused step, so per-rank device clocks are unavailable and the
+        best unbiased split of the measured wall time is proportional to
+        work done (equal per-microbatch speed — exactly true on one device).
+        On a real mixed fleet each host fences its own ranks with
+        ``start(rank)``/``stop(rank)`` instead and this method goes unused.
+        """
+        a = np.asarray(alloc, dtype=np.float64)
+        if a.shape != (self.n_ranks,):
+            raise ValueError(f"alloc must have length {self.n_ranks}")
+        total = a.sum()
+        if wall_s <= 0 or total <= 0:
+            return
+        self._acc += wall_s * a / total
+
+    def reset(self) -> None:
+        """Discard the current accumulation (and any open windows)."""
+        self._acc[:] = 0.0
+        self._starts.clear()
+
+    @property
+    def ready(self) -> bool:
+        """True once every rank has accumulated compute time this epoch."""
+        return bool(np.all(self._acc > 0))
 
     def epoch_times(self, alloc: Sequence[int] | None = None, epoch: int | None = None) -> np.ndarray:
         out = self._acc.copy()

@@ -110,6 +110,62 @@ def test_controller_state_dict_roundtrip():
     assert a.tolist() == b.tolist()
 
 
+def test_controller_state_dict_keeps_timing_log():
+    """Regression: state_dict omitted the timing log, so after any restore
+    the elastic coordinator saw no speed history and every post-restart
+    membership change fell back to a cold equal allocation."""
+    ctl = AdaptiveAllocationController(ControllerConfig(total=40, n_workers=4, ema_beta=0.0))
+    speeds = np.array([1.0, 1.0, 2.0, 4.0])
+    for _ in range(6):
+        ctl.observe(ctl.allocation / speeds)
+    restored = AdaptiveAllocationController.from_state_dict(ctl.state_dict())
+    assert len(restored.log) > 0
+    np.testing.assert_allclose(restored.log[-1].speeds, ctl.log[-1].speeds)
+    # the tail is bounded: checkpoints must not grow with run length
+    for _ in range(50):
+        ctl.observe(ctl.allocation / speeds)
+    assert len(ctl.state_dict()["log_tail"]) <= AdaptiveAllocationController.LOG_TAIL
+    # and a warm elastic rescale works from the RESTORED controller
+    from repro.runtime import ElasticCoordinator
+
+    plan = ElasticCoordinator(restored).remove([0])
+    r = plan.allocation / plan.allocation.sum()
+    np.testing.assert_allclose(r, [1 / 7, 2 / 7, 4 / 7], atol=0.06)
+
+
+def test_controller_resize_rebases_log():
+    """Regression: resize() replaced _State but kept old-membership TimingLog
+    entries, so the NEXT membership change read log[-1].speeds with the old
+    length and misindexed (or crashed on) the survivor speeds."""
+    ctl = AdaptiveAllocationController(ControllerConfig(total=40, n_workers=4, ema_beta=0.0))
+    speeds = np.array([1.0, 1.0, 2.0, 4.0])
+    for _ in range(5):
+        ctl.observe(ctl.allocation / speeds)
+    carried = np.array([1.0, 2.0, 4.0])
+    ctl.resize(3, carry_speeds=carried)
+    assert len(ctl.log) == 1
+    assert ctl.log[-1].alloc.shape == (3,)
+    np.testing.assert_allclose(ctl.log[-1].speeds, carried)
+    # resize without carry = no history, not stale history
+    ctl.resize(2)
+    assert len(ctl.log) == 0
+
+
+def test_controller_resize_carry_survives_zero_share_workers():
+    """With w_min=0 a very slow worker can round to a zero allocation; the
+    rebased log must still read back ALL carried speeds positive, or the
+    next rescale silently cold-starts equal."""
+    ctl = AdaptiveAllocationController(ControllerConfig(total=10, n_workers=2, w_min=0))
+    carried = np.array([1.0, 1.0, 100.0])
+    ctl.resize(3, carry_speeds=carried)
+    assert ctl.allocation.min() == 0  # the slow workers rounded to zero
+    np.testing.assert_allclose(ctl.log[-1].speeds, carried)
+    from repro.runtime import ElasticCoordinator
+
+    plan = ElasticCoordinator(ctl).remove([2])  # drop the fast one
+    assert plan.allocation.tolist() == [5, 5]  # carried 1:1, not crash/cold
+
+
 # ---------------------------------------------------------------------------
 # Simulator: paper's headline numbers
 # ---------------------------------------------------------------------------

@@ -92,6 +92,25 @@ def test_hetero_batcher_emits_partial_tail_allocation():
         assert np.all(last["inputs"][i, w:] == 0)
 
 
+def test_hetero_batcher_epoch_start_fast_forwards():
+    """Resume support: epoch(..., start=k) yields exactly the aggregations a
+    fresh iterator yields after k steps — the driver uses this to continue a
+    checkpointed run without replaying (or rebuilding) consumed batches."""
+    d = SyntheticLM(vocab_size=50, seq_len=8, n_sequences=96, seed=0)
+    batcher = HeteroBatcher(d, n_ranks=3, micro_batch=2, w_max=6, seed=0)
+    alloc = np.array([3, 2, 1])
+    full = list(batcher.epoch(0, alloc))
+    tail = list(batcher.epoch(0, alloc, start=3))
+    assert len(tail) == len(full) - 3
+    for a, b in zip(full[3:], tail):
+        np.testing.assert_array_equal(a["inputs"], b["inputs"])
+        np.testing.assert_array_equal(a["alloc"], b["alloc"])
+    # start == n_agg is an empty (exhausted-epoch) iterator; beyond is an error
+    assert list(batcher.epoch(0, alloc, start=len(full))) == []
+    with pytest.raises(ValueError):
+        list(batcher.epoch(0, alloc, start=len(full) + 1))
+
+
 def test_sampler_reshuffles_by_epoch():
     s = ProportionalSampler(64, 2)
     a = np.array([2, 2])

@@ -8,8 +8,10 @@ from repro.runtime import (
     ElasticCoordinator,
     FailureDetector,
     MeasuredTimingSource,
+    MembershipEvent,
     SimulatedTimingSource,
     StragglerMonitor,
+    parse_events,
 )
 from repro.core.hetero import ClusterSpec, WorkerSpeed
 
@@ -24,6 +26,84 @@ def test_failure_detector_lifecycle():
     assert fd.alive.tolist() == [True, True, False]
     # dead workers are not re-reported
     assert fd.tick() != [2] or 2 not in fd.tick()
+
+
+def test_failure_detector_rescale_remaps_to_survivor_order():
+    """Regression: detector indices are old-membership ids — after a
+    RescalePlan the coordinator renumbers workers to survivor order, and an
+    un-remapped detector lands heartbeats/deadness on the wrong workers."""
+    fd = FailureDetector(4, patience=3)
+    fd.tick()  # everyone missed 1
+    fd.heartbeat(2)  # only worker 2 has reported
+    # worker 1 dies and is removed; survivors [0, 2, 3] get renumbered
+    fd.rescale(survivors=[0, 2, 3], n_new=1)
+    assert fd.n_workers == 4
+    assert fd.alive.tolist() == [True, True, True, True]
+    # miss counts carried in the NEW ordering: old-2 (now index 1) was clean
+    assert fd._missed.tolist() == [1, 0, 1, 0]
+    # survivors that carried a miss hit patience=3 first; the clean slots
+    # (old-2 and the joiner) survive the same silence
+    assert fd.tick() == []
+    assert fd.tick() == [0, 2]
+    assert fd.alive.tolist() == [False, True, False, True]
+
+
+def test_failure_detector_patience_one_spares_heartbeating_workers():
+    """Regression: tick() counted a miss against EVERY alive worker, even
+    ones that heartbeated this interval — with patience=1 the first tick
+    declared the whole fleet dead."""
+    fd = FailureDetector(3, patience=1)
+    fd.heartbeat(0)
+    fd.heartbeat(1)
+    assert fd.tick() == [2]  # only the silent worker dies
+    assert fd.alive.tolist() == [True, True, False]
+    fd.heartbeat(0)
+    fd.heartbeat(1)
+    assert fd.tick() == []
+
+
+def test_failure_detector_rescale_rejects_bad_survivors():
+    fd = FailureDetector(3)
+    with pytest.raises(ValueError):
+        fd.rescale(survivors=[0, 5], n_new=0)
+
+
+def test_failure_detector_heartbeat_revives_dead_worker():
+    """Regression: a heartbeat from an already-declared-dead worker was
+    silently absorbed (missed count reset, alive stayed False), so a revived
+    worker could never rejoin."""
+    fd = FailureDetector(2, patience=2)
+    fd.tick()
+    dead = fd.tick()
+    assert dead == [0, 1]
+    assert fd.heartbeat(0) is True  # revival is signalled to the caller
+    assert fd.alive.tolist() == [True, False]
+    assert fd.heartbeat(0) is False  # ordinary heartbeat while alive
+    assert fd.tick() == []  # revived worker is not instantly re-dead
+    assert fd.alive.tolist() == [True, False]
+
+
+def test_parse_events_grammar():
+    evs = parse_events("add@8:gtx1080ti, fail@16:2,replace@4:1=v100")
+    assert [e.step for e in evs] == [4, 8, 16]  # sorted by step
+    assert evs[0] == MembershipEvent(step=4, kind="replace", index=1, gpu="v100")
+    assert evs[1] == MembershipEvent(step=8, kind="add", gpu="gtx1080ti")
+    assert evs[2] == MembershipEvent(step=16, kind="fail", index=2)
+
+
+@pytest.mark.parametrize(
+    "bad",
+    [
+        "frob@8:1",  # unknown kind
+        "add@8:warp9",  # unknown GPU
+        "fail@8:v100",  # fail wants an index
+        "replace@8:v100",  # replace wants index=gpu
+        "add@:v100",  # missing step
+    ],
+)
+def test_parse_events_rejects_bad_terms(bad):
+    with pytest.raises(ValueError):
+        parse_events(bad)
 
 
 def test_straggler_monitor_flags_persistent():
@@ -142,3 +222,75 @@ def test_measured_timing_double_start_same_rank():
     m.start(0)
     m.stop(0)
     np.testing.assert_allclose(m.epoch_times(), [1.0])
+
+
+def test_measured_timing_record_step_attributes_by_work():
+    """Single-process attribution: one fused step's wall time is credited to
+    ranks proportionally to the microbatches each computed, and the derived
+    speeds (alloc / t_s) come out equal — true on one device."""
+    m = MeasuredTimingSource(3)
+    assert not m.ready
+    m.record_step(1.0, [1, 2, 5])
+    assert m.ready
+    m.record_step(0.6, [2, 2, 4])
+    t = m.epoch_times()
+    np.testing.assert_allclose(t, [1 / 8 + 0.15, 2 / 8 + 0.15, 5 / 8 + 0.3])
+    assert not m.ready  # drained
+    # degenerate inputs are ignored, not crashed on
+    m.record_step(0.0, [1, 1, 1])
+    m.record_step(1.0, [0, 0, 0])
+    assert not m.ready
+    with pytest.raises(ValueError):
+        m.record_step(1.0, [1, 1])  # wrong membership size
+    # reset() discards a partial accumulation (an epoch the driver decided
+    # not to measure) instead of leaking it into the next epoch
+    m.record_step(1.0, [1, 1, 1])
+    m.reset()
+    assert not m.ready
+    m.record_step(0.9, [1, 1, 1])
+    np.testing.assert_allclose(m.epoch_times(), [0.3, 0.3, 0.3])
+
+
+def test_second_membership_change_uses_rebased_log():
+    """Satellite regression: after a resize, a SECOND membership change must
+    read carried speeds of the new membership — the stale old-length log
+    previously misindexed (or crashed) ElasticCoordinator.remove."""
+    ctl = AdaptiveAllocationController(ControllerConfig(total=40, n_workers=4, ema_beta=0.0))
+    speeds = np.array([1.0, 1.0, 2.0, 4.0])
+    for _ in range(6):
+        ctl.observe(ctl.allocation / speeds)
+    coord = ElasticCoordinator(ctl)
+    plan1 = coord.remove([0])  # -> speeds [1, 2, 4]
+    assert plan1.allocation.sum() == 40
+    # immediately remove again, WITHOUT an observe in between: the rebased
+    # log must still carry the survivors' speeds [2, 4]
+    plan2 = coord.remove([0])
+    assert plan2.survivors == [1, 2]
+    assert plan2.allocation.sum() == 40
+    r = plan2.allocation / plan2.allocation.sum()
+    np.testing.assert_allclose(r, [2 / 6, 4 / 6], atol=0.06)
+    # and after observing under the new membership, a third change still works
+    ctl.observe(ctl.allocation / np.array([2.0, 4.0]))
+    plan3 = coord.remove([1])
+    assert plan3.allocation.tolist() == [40]
+
+
+def test_coordinator_defensive_on_degenerate_log():
+    """A log entry whose length does not match the membership, or whose
+    speeds are non-positive/infinite (t_s of 0), must read as 'no history'
+    — cold equal fallback — not crash or emit NaN allocations."""
+    from repro.core.timing import EpochTiming
+
+    ctl = AdaptiveAllocationController(ControllerConfig(total=12, n_workers=3))
+    ctl.log.append(
+        EpochTiming(epoch=0, alloc=np.array([6, 6]), t_s=np.array([1.0, 1.0]), t_c=0.0)
+    )
+    plan = ElasticCoordinator(ctl).remove([2])
+    assert plan.allocation.tolist() == [6, 6]  # cold equal fallback
+    # right length but a zero t_s component -> infinite speed -> still "no history"
+    ctl2 = AdaptiveAllocationController(ControllerConfig(total=12, n_workers=3))
+    ctl2.log.append(
+        EpochTiming(epoch=0, alloc=np.array([4, 4, 4]), t_s=np.array([1.0, 1.0, 0.0]), t_c=0.0)
+    )
+    plan2 = ElasticCoordinator(ctl2).remove([0])
+    assert plan2.allocation.tolist() == [6, 6]
