@@ -1,47 +1,46 @@
-"""Batched serving demo: prefill + decode with KV/SSM caches.
+"""Continuous-batching serving demo across the three cache families.
 
     PYTHONPATH=src python examples/serve_decode.py
 
-Runs two reduced architectures through the same serve path the decode_32k /
-long_500k dry-run cells lower: a GQA transformer (KV cache) and RWKV6
-(constant-size state — the long-context family).
+Each architecture runs MORE requests than the engine has slots, with
+staggered arrivals: finished requests retire their slot immediately and the
+next queued request is prefilled into it (one jitted forward over the whole
+prompt) while the other slots keep decoding — the per-slot cache positions
+make every slot advance on its own clock.  Families covered:
+
+  * smollm-360m            — GQA KV cache (per-slot position tables)
+  * rwkv6-1.6b             — constant-size recurrent state (long-context family)
+  * jamba-1.5-large-398b   — hybrid: KV + conv + SSM caches in one stack
 """
 
-import time
-
-import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import smoke_config
-from repro.models import decode_step, init_cache, init_params
+from repro.serve import Request, SchedulerConfig, ServeEngine, serve_loop
 
 
-def generate(arch: str, batch=4, prompt_len=12, gen=24):
-    cfg = smoke_config(arch, seq=prompt_len + gen)
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    cache = init_cache(cfg, batch, prompt_len + gen)
-    step = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg))
-
-    prompt = jax.random.randint(jax.random.PRNGKey(1), (batch, prompt_len), 0, cfg.vocab_size)
-    logits = None
-    t0 = time.time()
-    for t in range(prompt_len):  # prefill through the cache
-        logits, cache = step(params, cache, prompt[:, t])
-    toks = []
-    for _ in range(gen):  # greedy decode
-        nxt = jnp.argmax(logits, axis=-1)
-        toks.append(nxt)
-        logits, cache = step(params, cache, nxt)
-    dt = time.time() - t0
-    out = jnp.stack(toks, axis=1)
+def demo(arch: str, n_slots=2, n_requests=5, max_seq=48):
+    cfg = smoke_config(arch, seq=max_seq)
+    engine = ServeEngine(cfg, n_slots=n_slots, max_seq=max_seq, seed=0)
+    rng = np.random.default_rng(1)
+    requests = []
+    for i in range(n_requests):  # mixed lengths, arrivals staggered every 2 ticks
+        prompt = rng.integers(0, cfg.vocab_size, int(rng.integers(4, 13))).astype(np.int32)
+        requests.append(Request(rid=i, prompt=prompt, max_gen=int(rng.integers(4, 17)), arrival=2.0 * i))
+    summary = serve_loop(engine, requests, SchedulerConfig(max_waiting_prefill=1))
     print(
-        f"{arch:28s} generated {out.shape} in {dt:.2f}s "
-        f"({batch * gen / dt:.1f} tok/s on CPU) cache_index={int(cache['index'])}"
+        f"{arch:28s} {n_requests} requests through {n_slots} slots: "
+        f"{summary['gen_tokens']} tokens in {summary['ticks']} ticks "
+        f"({summary['throughput_tok_per_s']} tok/s wall, "
+        f"slot util {summary['slot_utilization']:.0%}, "
+        f"{engine.prefills} prefills -> slot reuse x{engine.prefills / n_slots:.1f})"
     )
-    return out
+    for r in requests:
+        print(f"    req{r.rid}: prompt {len(r.prompt):2d} arrive t={r.arrival:4.1f} "
+              f"admit t={r.t_admit:4.1f} finish t={r.t_finish:5.1f} -> {len(r.output)} tokens")
 
 
 if __name__ == "__main__":
-    generate("smollm-360m")
-    generate("rwkv6-1.6b")
-    generate("jamba-1.5-large-398b")  # hybrid: KV + conv + ssm caches together
+    demo("smollm-360m")
+    demo("rwkv6-1.6b")
+    demo("jamba-1.5-large-398b")  # hybrid: KV + conv + ssm caches together

@@ -1,93 +1,101 @@
-"""Batched decode serving driver (CPU-runnable at smoke scale).
+"""Serving CLI — a thin driver over the continuous-batching engine.
 
-Prefill is token-parallel (one forward over the prompt feeding the KV cache
-via repeated decode steps at smoke scale); decode is step-by-step with a
-static-shape cache — the same ``decode_step`` the dry-run lowers for the
-decode_32k / long_500k cells.
+Synthesizes a mixed-length request workload (Poisson arrivals or a closed
+backlog), drives it through ``repro.serve.ServeEngine`` with FIFO admission,
+and prints a JSON summary (throughput, p50/p95 latency in decode ticks,
+slot utilization).  ``--static`` switches to the static-batch baseline the
+old driver implemented (admit a full batch, drain, repeat) for A/B runs;
+``benchmarks/run.py --scenario serve`` does that comparison plus the
+adaptive-router experiment end-to-end.
 
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
-      --batch 4 --prompt-len 16 --gen 32
+      --slots 4 --requests 8 --prompt-lens 4,16 --gen-lens 8,24
 """
 
 from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, smoke_config
-from repro.models import decode_step, init_cache, init_params
+from repro.models import init_params
+from repro.serve import SchedulerConfig, ServeEngine, WorkloadConfig, serve_loop, synthesize
+
+
+def _span(text: str) -> tuple[int, int]:
+    parts = [int(x) for x in text.split(",")]
+    if len(parts) == 1:
+        return parts[0], parts[0]
+    if len(parts) != 2:
+        raise argparse.ArgumentTypeError(f"expected LO,HI (or one int), got {text!r}")
+    return parts[0], parts[1]
 
 
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4, help="engine batch slots")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-lens", type=_span, default=(4, 16), help="LO,HI inclusive")
+    ap.add_argument("--gen-lens", type=_span, default=(8, 24), help="LO,HI inclusive")
+    ap.add_argument("--rate", type=float, default=0.0, help="Poisson arrivals per tick; 0 = all at t=0")
+    ap.add_argument("--max-seq", type=int, default=0, help="cache length (0 = prompt_max + gen_max)")
+    ap.add_argument("--max-prefills-per-tick", type=int, default=2)
+    ap.add_argument("--static", action="store_true", help="static-batch baseline (admit only when idle)")
     ap.add_argument("--temperature", type=float, default=0.0, help="0 = greedy")
+    ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json-out", default=None)
     args = ap.parse_args(argv)
 
-    cfg = smoke_config(args.arch, seq=args.prompt_len + args.gen) if args.smoke else get_config(args.arch)
-    key = jax.random.PRNGKey(args.seed)
-    params = init_params(cfg, key)
-    max_seq = args.prompt_len + args.gen
-    cache = init_cache(cfg, args.batch, max_seq)
-
-    step = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg))
-
-    if cfg.embeds_input:
-        # vlm stub: prompts are precomputed embeddings
-        prompt = jax.random.normal(key, (args.batch, args.prompt_len, cfg.d_model), jnp.float32)
-        feed = lambda t: prompt[:, t]  # noqa: E731
-    else:
-        prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
-        feed = lambda t: prompt[:, t]  # noqa: E731
-
-    # prefill: feed prompt tokens through the cache
-    t0 = time.time()
-    logits = None
-    for t in range(args.prompt_len):
-        logits, cache = step(params, cache, feed(t))
-    prefill_s = time.time() - t0
-
-    # decode
-    out_tokens = []
-    t0 = time.time()
-    tok = jnp.argmax(logits, axis=-1)
-    for i in range(args.gen):
-        if args.temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(sub, logits / args.temperature, axis=-1)
-        else:
-            tok = jnp.argmax(logits, axis=-1)
-        out_tokens.append(tok)
-        if cfg.embeds_input:
-            # embed the sampled token through the tied table stub
-            emb = jnp.take(params["embed"], tok, axis=0)
-            logits, cache = step(params, cache, emb)
-        else:
-            logits, cache = step(params, cache, tok)
-    decode_s = time.time() - t0
-
-    gen = jnp.stack(out_tokens, axis=1)
+    worst_case = args.prompt_lens[1] + args.gen_lens[1]
+    max_seq = args.max_seq or worst_case
+    if max_seq < worst_case:
+        ap.error(
+            f"--max-seq {max_seq} < prompt_max + gen_max = {worst_case}: "
+            "the longest request could not be admitted"
+        )
+    cfg = smoke_config(args.arch, seq=max_seq) if args.smoke else get_config(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    engine = ServeEngine(
+        cfg,
+        params,
+        n_slots=args.slots,
+        max_seq=max_seq,
+        eos_id=args.eos_id,
+        temperature=args.temperature,
+        seed=args.seed,
+    )
+    wl = WorkloadConfig(
+        n_requests=args.requests,
+        rate=args.rate,
+        prompt_len=args.prompt_lens,
+        gen_len=args.gen_lens,
+        vocab_size=cfg.vocab_size,
+        seed=args.seed,
+    )
+    requests = synthesize(wl, embed_dim=cfg.d_model if cfg.embeds_input else None)
+    summary = serve_loop(
+        engine,
+        requests,
+        SchedulerConfig(max_waiting_prefill=args.max_prefills_per_tick, continuous=not args.static),
+    )
     result = {
         "arch": cfg.name,
-        "batch": args.batch,
-        "prompt_len": args.prompt_len,
-        "generated": int(gen.shape[1]),
-        "prefill_s": round(prefill_s, 3),
-        "decode_s": round(decode_s, 3),
-        "decode_tok_per_s": round(args.batch * args.gen / max(decode_s, 1e-9), 1),
-        "sample_tokens": gen[0, :8].tolist() if not cfg.embeds_input else gen[0, :8].tolist(),
+        "mode": "static" if args.static else "continuous",
+        "slots": args.slots,
+        "max_seq": max_seq,
+        **summary,
+        "sample_tokens": (requests[0].output or [])[:8],
     }
     print(json.dumps(result, indent=1))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(result, f, indent=1)
     return result
 
 

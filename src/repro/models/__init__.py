@@ -8,6 +8,7 @@ from repro.models.transformer import (
     init_params,
     loss_fn,
     param_count,
+    prefill,
 )
 
 __all__ = [
@@ -22,4 +23,5 @@ __all__ = [
     "init_params",
     "loss_fn",
     "param_count",
+    "prefill",
 ]

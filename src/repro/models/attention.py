@@ -25,7 +25,7 @@ from repro.models.config import ModelConfig
 from repro.models.layers import dense_init, linear, rmsnorm, rmsnorm_init
 from repro.models.rope import apply_rope
 
-__all__ = ["init_attention", "attention_train", "attention_decode"]
+__all__ = ["init_attention", "attention_train", "attention_decode", "attention_prefill"]
 
 NEG_INF = -2.0e38  # large finite; avoids NaN from (-inf) - (-inf)
 
@@ -193,36 +193,55 @@ def attention_decode(
 ) -> tuple[jnp.ndarray, dict]:
     """One-token decode against a (possibly ring-buffer) KV cache.
 
-    x: (B, 1, d); cache: {"k","v": (B, S_cache, Hkv, Dh), "pos": (S_cache,),
-    "index": ()}.  ``S_cache`` may be smaller than the context (windowed
-    local-attention cache): entries live at slot ``pos % S_cache`` and
-    ``pos`` records each slot's absolute position (-1 = empty), so masking is
-    exact across wraparound.  Returns (out (B,1,d), new cache).
+    x: (B, 1, d); cache: {"k","v": (B, S_cache, Hkv, Dh), "pos", "index"}.
+    ``index`` is either a scalar (static batch: all rows share one position,
+    ``pos`` is (S_cache,)) or a vector (B,) of independent per-slot positions
+    (continuous batching: ``pos`` is (B, S_cache) and every row admits /
+    retires on its own clock).  ``S_cache`` may be smaller than the context
+    (windowed local-attention cache): entries live at slot ``pos % S_cache``
+    and ``pos`` records each slot's absolute position (-1 = empty), so
+    masking is exact across wraparound.  Returns (out (B,1,d), new cache).
     """
     B, one, _ = x.shape
     assert one == 1, "decode expects a single new token"
     index = cache["index"]
-    positions = jnp.broadcast_to(jnp.reshape(index, (1, 1)), (B, 1))
+    per_slot = index.ndim == 1
+    if per_slot:
+        positions = index[:, None]
+    else:
+        positions = jnp.broadcast_to(jnp.reshape(index, (1, 1)), (B, 1))
     q, k_new, v_new = _qkv(p, x, cfg, positions)
 
     S_cache = cache["k"].shape[1]
     slot = jnp.mod(index, S_cache)
+    if per_slot:
+        bidx = jnp.arange(B)
+
+        def put(buf, new):  # new: (B, 1, ...) -> row-wise scatter at each slot
+            return buf.at[bidx, slot].set(new[:, 0].astype(buf.dtype))
+
+        pos = cache["pos"].at[bidx, slot].set(index)
+    else:
+
+        def put(buf, new):
+            return jax.lax.dynamic_update_slice_in_dim(buf, new.astype(buf.dtype), slot, axis=1)
+
+        pos = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], jnp.reshape(index, (1,)), slot, axis=0
+        )
     int8_kv = cache["k"].dtype == jnp.int8
     if int8_kv:
         k_q, k_s = _quant_int8(k_new)
         v_q, v_s = _quant_int8(v_new)
-        k_i = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_q, slot, axis=1)
-        v_i = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_q, slot, axis=1)
-        ks = jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], k_s, slot, axis=1)
-        vs = jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], v_s, slot, axis=1)
+        k_i = put(cache["k"], k_q)
+        v_i = put(cache["v"], v_q)
+        ks = put(cache["k_scale"], k_s)
+        vs = put(cache["v_scale"], v_s)
         k = k_i.astype(jnp.bfloat16) * ks[..., None]
         v = v_i.astype(jnp.bfloat16) * vs[..., None]
     else:
-        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
-        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
-    pos = jax.lax.dynamic_update_slice_in_dim(
-        cache["pos"], jnp.reshape(index, (1,)), slot, axis=0
-    )
+        k = put(cache["k"], k_new)
+        v = put(cache["v"], v_new)
 
     Hkv = cfg.n_kv_heads
     G = cfg.n_heads // Hkv
@@ -230,10 +249,12 @@ def attention_decode(
     qg = q.reshape(B, 1, Hkv, G, Dh)
     scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * (Dh**-0.5)
     scores = _softcap(scores, cfg.attn_logit_softcap)
-    valid = (pos >= 0) & (pos <= index)  # (S_cache,)
+    bound = index[:, None] if per_slot else index
+    valid = (pos >= 0) & (pos <= bound)  # (S_cache,) or (B, S_cache)
     if attn_type == "local":
-        valid &= pos > (index - cfg.sliding_window)
-    scores = jnp.where(valid[None, None, None, None], scores, NEG_INF)
+        valid &= pos > (bound - cfg.sliding_window)
+    vmask = valid[:, None, None, None, :] if per_slot else valid[None, None, None, None]
+    scores = jnp.where(vmask, scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v).reshape(B, 1, cfg.q_dim)
     new_cache = {"pos": pos, "index": index + 1}
@@ -242,6 +263,63 @@ def attention_decode(
     else:
         new_cache.update(k=k, v=v)
     return linear(out.astype(x.dtype), p["wo"]), new_cache
+
+
+def attention_prefill(
+    p: dict,
+    x: jnp.ndarray,
+    cache: dict,
+    cfg: ModelConfig,
+    attn_type: str,
+    lengths: jnp.ndarray,
+    impl: str = "naive",
+) -> tuple[jnp.ndarray, dict]:
+    """Prompt-parallel prefill: one full-sequence attention over the padded
+    prompt, then a collision-free scatter of K/V into the (possibly
+    ring-buffer) per-slot cache.
+
+    x: (B, S_p, d) right-padded prompts; lengths: (B,) valid counts (>= 1);
+    cache: per-slot KV cache (``pos`` of shape (B, S_cache)).  Right padding
+    keeps RoPE positions at 0..L-1 and causality keeps pad rows out of real
+    rows' outputs.  Returns (out (B, S_p, d), new cache pieces).
+    """
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    q, k, v = _qkv(p, x, cfg, positions)
+    window = cfg.sliding_window if attn_type == "local" else None
+    out = _attend(q, k, v, positions, positions, cfg, window, impl)
+    out = linear(out.reshape(B, S, cfg.q_dim), p["wo"])
+
+    S_cache = cache["k"].shape[1]
+    s_idx = jnp.arange(S_cache)[None, :]  # (1, S_cache)
+    L = lengths[:, None]  # (B, 1)
+    # Ring slot s holds the NEWEST prompt position congruent to s mod S_cache:
+    # p_win = s + floor((L-1-s)/S_cache)*S_cache (or -1 when the row has no
+    # entry for that slot).  Expressing the scatter as a gather makes ring
+    # wraparound (S_p > S_cache) collision-free — jnp scatter order on
+    # duplicate indices is unspecified.
+    p_win = jnp.where(L > s_idx, s_idx + ((L - 1 - s_idx) // S_cache) * S_cache, -1)
+    gidx = jnp.clip(p_win, 0, S - 1)
+    keep = p_win >= 0
+
+    def gather(src, buf):
+        shp = (B, S_cache) + (1,) * (src.ndim - 2)
+        g = jnp.take_along_axis(src, gidx.reshape(shp), axis=1)
+        return jnp.where(keep.reshape(shp), g, 0).astype(buf.dtype)
+
+    new_cache = {"pos": p_win.astype(jnp.int32)}
+    if cache["k"].dtype == jnp.int8:
+        k_q, k_s = _quant_int8(k)
+        v_q, v_s = _quant_int8(v)
+        new_cache.update(
+            k=gather(k_q, cache["k"]),
+            v=gather(v_q, cache["v"]),
+            k_scale=gather(k_s, cache["k_scale"]),
+            v_scale=gather(v_s, cache["v_scale"]),
+        )
+    else:
+        new_cache.update(k=gather(k, cache["k"]), v=gather(v, cache["v"]))
+    return out, new_cache
 
 
 def _quant_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -254,13 +332,18 @@ def _quant_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
 
 
-def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None, window: bool = False) -> dict:
-    """``window=True``: ring buffer of sliding_window slots (local layers)."""
+def init_kv_cache(
+    cfg: ModelConfig, batch: int, max_seq: int, dtype=None, window: bool = False, per_slot: bool = False
+) -> dict:
+    """``window=True``: ring buffer of sliding_window slots (local layers).
+    ``per_slot=True``: each batch row keeps its own position bookkeeping
+    (``pos`` (batch, S_cache), ``index`` (batch,)) so rows advance
+    independently — the continuous-batching layout."""
     dt = dtype or cfg.dtype("compute")
     s_cache = min(max_seq, cfg.sliding_window) if window else max_seq
     cache = {
-        "pos": jnp.full((s_cache,), -1, jnp.int32),
-        "index": jnp.zeros((), jnp.int32),
+        "pos": jnp.full((batch, s_cache) if per_slot else (s_cache,), -1, jnp.int32),
+        "index": jnp.zeros((batch,) if per_slot else (), jnp.int32),
     }
     if cfg.kv_cache_dtype == "int8":
         cache["k"] = jnp.zeros((batch, s_cache, cfg.n_kv_heads, cfg.head_dim), jnp.int8)

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from repro.models.config import ModelConfig
 from repro.models.layers import dense_init, linear
 
-__all__ = ["init_mamba", "mamba_train", "mamba_decode", "init_mamba_cache"]
+__all__ = ["init_mamba", "mamba_train", "mamba_prefill", "mamba_decode", "init_mamba_cache"]
 
 
 def init_mamba(key: jax.Array, cfg: ModelConfig) -> dict:
@@ -117,6 +117,61 @@ def mamba_train(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
     y = y + xs * p["D"].astype(x.dtype)
     y = y * jax.nn.silu(z)
     return linear(y, p["out_proj"])
+
+
+def mamba_prefill(p: dict, x: jnp.ndarray, cfg: ModelConfig, lengths: jnp.ndarray):
+    """Prompt-parallel prefill: the chunked selective scan with per-row length
+    masking.  Zeroing ``dt`` for padded steps makes the discretized update the
+    identity (A_bar = e^0 = 1, Bx = 0), so the carried SSM state freezes at
+    each row's last real token — exact for right-padded prompts of mixed
+    lengths.  x: (B, S, d); lengths: (B,) >= 1.
+    Returns (y (B, S, d), cache {"conv", "ssm"} matching init_mamba_cache).
+    """
+    m = cfg.mamba
+    B, S, _ = x.shape
+    di, ds = m.d_inner, m.d_state
+    dtr = m.resolved_dt_rank(cfg.d_model)
+
+    xz = linear(x, p["in_proj"])
+    xs_raw, z = jnp.split(xz, 2, axis=-1)
+    xs, _ = _causal_conv(xs_raw, p["conv_w"])
+    xs = jax.nn.silu(xs)
+
+    dbc = linear(xs, p["x_proj"])
+    dt_in, Bc, Cc = jnp.split(dbc, [dtr, dtr + ds], axis=-1)
+    A = -jnp.exp(p["A_log"])
+    mask = (jnp.arange(S)[None, :] < lengths[:, None]).astype(jnp.float32)  # (B,S)
+
+    chunk = min(m.chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nchunks = S // chunk
+
+    def step(h, idx):
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, idx * chunk, chunk, axis=1)  # noqa: E731
+        dt_c = jax.nn.softplus(linear(sl(dt_in), p["dt_proj"]).astype(jnp.float32) + p["dt_bias"])
+        dt_c = dt_c * sl(mask)[..., None]  # padded steps: identity state update
+        x_c = sl(xs).astype(jnp.float32)
+        B_c = sl(Bc).astype(jnp.float32)
+        C_c = sl(Cc).astype(jnp.float32)
+        A_bar = jnp.exp(dt_c[..., None] * A[None, None])
+        Bx = (dt_c * x_c)[..., None] * B_c[:, :, None, :]
+        y, h_end = _ssm_chunk(h, A_bar, Bx, C_c)
+        return h_end, y.astype(x.dtype)
+
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    h_end, ys = jax.lax.scan(step, h0, jnp.arange(nchunks))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di)
+    y = y + xs * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = linear(y, p["out_proj"])
+
+    # conv state = the K-1 raw (pre-conv) inputs ending at each row's last
+    # real token; positions before the sequence start contribute zeros.
+    K = m.d_conv
+    j = lengths[:, None] - (K - 1) + jnp.arange(K - 1)[None, :]  # (B, K-1)
+    gath = jnp.take_along_axis(xs_raw, jnp.clip(j, 0, S - 1)[..., None], axis=1)
+    conv = jnp.where((j >= 0)[..., None], gath, 0)
+    return out, {"conv": conv, "ssm": h_end}
 
 
 def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=None) -> dict:

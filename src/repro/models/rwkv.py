@@ -22,6 +22,7 @@ from repro.models.layers import dense_init, layernorm, layernorm_init, linear
 __all__ = [
     "init_rwkv",
     "rwkv_train",
+    "rwkv_prefill",
     "rwkv_decode",
     "init_rwkv_cache",
     "wkv_scan",
@@ -188,7 +189,7 @@ def _group_norm_heads(x: jnp.ndarray, gain, bias, H: int, eps: float = 64e-5):
     return (xn.reshape(B, T, d) * gain + bias).astype(x.dtype)
 
 
-def _time_mix(p, x, cfg: ModelConfig, last_x, s0, wkv_impl: str):
+def _time_mix(p, x, cfg: ModelConfig, last_x, s0, wkv_impl: str, length_mask=None):
     r_cfg = cfg.rwkv
     B, T, d = x.shape
     H = d // r_cfg.head_dim
@@ -207,6 +208,12 @@ def _time_mix(p, x, cfg: ModelConfig, last_x, s0, wkv_impl: str):
     # the bound makes the chunked form (jnp and Pallas) overflow-free for
     # chunks <= 32 after mid-chunk recentering. Mirrored in kernels/rwkv6_scan.
     w = jnp.exp(-jnp.minimum(jnp.exp(dec), 4.0)).reshape(B, T, H, D)  # in [e^-4, 1)
+    if length_mask is not None:
+        # padded steps: k = 0 and w = 1 make S_t = S_{t-1} (state frozen at
+        # each row's last real token) — the prefill masking for mixed lengths.
+        lm = length_mask[:, :, None, None]
+        kk = kk * lm
+        w = jnp.where(lm > 0, w, 1.0)
     u = p["u"].reshape(H, D)
 
     if wkv_impl == "scan":
@@ -261,6 +268,36 @@ def rwkv_train(
     x = x + tm_out
     cm_out, _ = _channel_mix(p, pin(layernorm(x, p["ln2"], cfg.norm_eps)), None)
     return x + cm_out
+
+
+def rwkv_prefill(
+    p: dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    lengths: jnp.ndarray,
+    wkv_impl: str = "chunked",
+):
+    """Prompt-parallel prefill: the full-sequence block once over the padded
+    prompt, capturing the serve cache at each row's last real token.  Padded
+    steps carry the wkv state unchanged (see ``_time_mix`` length_mask);
+    ``tm_last``/``cm_last`` are gathered at position L-1.  x: (B, S, d),
+    right-padded; lengths: (B,) >= 1.  Returns (out with residuals, cache).
+    """
+    B, T, d = x.shape
+    mask = (jnp.arange(T)[None, :] < lengths[:, None]).astype(jnp.float32)
+    x1 = layernorm(x, p["ln1"], cfg.norm_eps)
+    tm_out, _, s_end = _time_mix(p, x1, cfg, None, None, wkv_impl, length_mask=mask)
+    x = x + tm_out
+    x2 = layernorm(x, p["ln2"], cfg.norm_eps)
+    cm_out, _ = _channel_mix(p, x2, None)
+    out = x + cm_out
+    li = jnp.broadcast_to((lengths - 1)[:, None, None], (B, 1, d))
+    cache = {
+        "tm_last": jnp.take_along_axis(x1, li, axis=1),
+        "cm_last": jnp.take_along_axis(x2, li, axis=1),
+        "state": s_end,
+    }
+    return out, cache
 
 
 def init_rwkv_cache(cfg: ModelConfig, batch: int, dtype=None) -> dict:

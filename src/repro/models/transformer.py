@@ -34,6 +34,7 @@ __all__ = [
     "loss_fn",
     "init_cache",
     "decode_step",
+    "prefill",
     "param_count",
 ]
 
@@ -286,10 +287,10 @@ def loss_fn(
 # ---------------------------------------------------------------------------
 
 
-def _init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, max_seq: int) -> Params:
+def _init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, max_seq: int, per_slot: bool = False) -> Params:
     if spec.kind == "attn":
         window = cfg.windowed_cache and spec.attn_type == "local"
-        c = attn_lib.init_kv_cache(cfg, batch, max_seq, window=window)
+        c = attn_lib.init_kv_cache(cfg, batch, max_seq, window=window, per_slot=per_slot)
         del c["index"]  # tracked once at the top level
         return c
     if spec.kind == "mamba":
@@ -297,17 +298,21 @@ def _init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, max_seq: in
     return rwkv_lib.init_rwkv_cache(cfg, batch)
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Params:
-    cache: Params = {"index": jnp.zeros((), jnp.int32)}
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, per_slot: bool = False) -> Params:
+    """``per_slot=True``: the continuous-batching layout — ``index`` is (batch,)
+    and attention ``pos`` tables are per-row, so each batch slot admits and
+    retires independently (see ``repro.serve.engine``).  The default scalar
+    ``index`` keeps the static lockstep layout."""
+    cache: Params = {"index": jnp.zeros((batch,) if per_slot else (), jnp.int32)}
     if cfg.n_repeats > 0:
         per = [
-            {f"layer{i}": _init_layer_cache(cfg, s, batch, max_seq) for i, s in enumerate(cfg.block_pattern)}
+            {f"layer{i}": _init_layer_cache(cfg, s, batch, max_seq, per_slot) for i, s in enumerate(cfg.block_pattern)}
             for _ in range(cfg.n_repeats)
         ]
         cache["body"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per) if cfg.n_repeats > 1 else jax.tree.map(lambda x: x[None], per[0])
     if cfg.tail_layers:
         cache["tail"] = {
-            f"layer{i}": _init_layer_cache(cfg, s, batch, max_seq) for i, s in enumerate(cfg.tail_layers)
+            f"layer{i}": _init_layer_cache(cfg, s, batch, max_seq, per_slot) for i, s in enumerate(cfg.tail_layers)
         }
     return cache
 
@@ -406,4 +411,116 @@ def decode_step(
         c = cfg.final_logit_softcap
         logits = c * jnp.tanh(logits / c)
     logits = _wsc(logits, sh.get("logits"))
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill (serving: whole prompt -> cache in one jitted forward)
+# ---------------------------------------------------------------------------
+
+
+def _prefill_layer(p, spec: LayerSpec, h, layer_cache, lengths, cfg: ModelConfig, attn_impl, wkv_impl):
+    if spec.kind == "rwkv":
+        return rwkv_lib.rwkv_prefill(p["rwkv"], h, cfg, lengths, wkv_impl=wkv_impl)
+    hi = norm_apply(h, p["norm1"], cfg.norm, cfg.norm_eps)
+    if spec.kind == "attn":
+        mix, new_cache = attn_lib.attention_prefill(
+            p["mixer"], hi, layer_cache, cfg, spec.attn_type, lengths, impl=attn_impl
+        )
+    else:
+        mix, new_cache = mamba_lib.mamba_prefill(p["mixer"], hi, cfg, lengths)
+    if cfg.post_block_norm:
+        mix = norm_apply(mix, p["norm1_post"], cfg.norm, cfg.norm_eps)
+    h = h + mix
+    hi = norm_apply(h, p["norm2"], cfg.norm, cfg.norm_eps)
+    if spec.moe:
+        ffn, _ = moe_lib.moe_apply(p["ffn"], hi, cfg)
+    else:
+        ffn = mlp_lib.mlp_apply(p["ffn"], hi, cfg)
+    if cfg.post_block_norm:
+        ffn = norm_apply(ffn, p["norm2_post"], cfg.norm, cfg.norm_eps)
+    return h + ffn, new_cache
+
+
+def prefill(
+    params: Params,
+    cache: Params,
+    tokens: jnp.ndarray,
+    lengths: jnp.ndarray,
+    cfg: ModelConfig,
+    attn_impl: str = "naive",
+    wkv_impl: str = "chunked",
+) -> tuple[jnp.ndarray, Params]:
+    """Batched prompt-parallel prefill: ONE forward over the whole (padded)
+    prompt writes every layer's cache — replaces the token-at-a-time prefill
+    loop the old serve driver ran (S jitted dispatches -> 1).
+
+    tokens: (B, S_p) int32 right-padded prompts, or (B, S_p, d) embeddings
+    with ``cfg.embeds_input``; lengths: (B,) valid counts (>= 1, <= S_p);
+    cache: per-slot cache from ``init_cache(..., per_slot=True)``.  Attention
+    layers attend in parallel (causality keeps pad columns inert); recurrent
+    layers (mamba / rwkv) freeze their state at each row's last real token.
+
+    Returns (logits at each row's last real token (B, V), cache' with
+    ``index == lengths``).
+    """
+    assert cache["index"].ndim == 1, "prefill requires a per-slot cache (init_cache(per_slot=True))"
+    cdt = cfg.dtype("compute")
+    if cfg.embeds_input and tokens.dtype != jnp.int32 and tokens.ndim == 3:
+        h = tokens.astype(cdt)
+    else:
+        h = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    if cfg.scale_embeddings:
+        h = h * jnp.asarray(cfg.d_model**0.5, cdt)
+    B = h.shape[0]
+    lengths = lengths.astype(jnp.int32)
+
+    new_cache: Params = {"index": lengths}
+    if cfg.n_repeats > 0:
+        # Cache in the scan carry for the same aliasing reason as decode_step.
+
+        def scan_body(carry, xs):
+            h, body_cache = carry
+            block_params, rep = xs
+            block_cache = jax.tree.map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, rep, 0, keepdims=False), body_cache
+            )
+            new_block_cache = {}
+            for i, spec in enumerate(cfg.block_pattern):
+                key = f"layer{i}"
+                h, nc = _prefill_layer(
+                    block_params[key], spec, h, block_cache[key], lengths, cfg, attn_impl, wkv_impl
+                )
+                new_block_cache[key] = nc
+            body_cache = jax.tree.map(
+                lambda c, n: jax.lax.dynamic_update_index_in_dim(c, n.astype(c.dtype), rep, 0),
+                body_cache,
+                new_block_cache,
+            )
+            return (h, body_cache), None
+
+        (h, nb), _ = jax.lax.scan(
+            scan_body,
+            (h, cache["body"]),
+            (params["body"], jnp.arange(cfg.n_repeats)),
+        )
+        new_cache["body"] = nb
+    if cfg.tail_layers:
+        new_cache["tail"] = {}
+        for i, spec in enumerate(cfg.tail_layers):
+            key = f"layer{i}"
+            h, nc = _prefill_layer(
+                params["tail"][key], spec, h, cache["tail"][key], lengths, cfg, attn_impl, wkv_impl
+            )
+            new_cache["tail"][key] = jax.tree.map(
+                lambda c, n: n.astype(c.dtype), cache["tail"][key], nc
+            )
+
+    h = norm_apply(h, params["final_norm"], cfg.norm, cfg.norm_eps)
+    last = jnp.take_along_axis(h, jnp.broadcast_to((lengths - 1)[:, None, None], (B, 1, h.shape[-1])), axis=1)
+    w_out = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (last @ w_out.astype(last.dtype))[:, 0]
+    if cfg.final_logit_softcap > 0:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
     return logits, new_cache

@@ -1,0 +1,39 @@
+"""Heterogeneity-aware serving engine.
+
+Layers (bottom up):
+
+* ``engine``    — continuous-batching decode engine over the model zoo's
+  ``prefill``/``decode_step`` with per-slot cache positions: slots admit and
+  retire independently, so a finished request frees its slot immediately
+  instead of blocking until the whole batch drains.
+* ``scheduler`` — request queue + FIFO admission policy (per-tick prefill
+  cap, EOS/length retirement) and the serve loop that drives an engine
+  through a workload.
+* ``workload``  — Poisson / trace request synthesis (mixed prompt and
+  generation lengths, seeded).
+* ``router``    — multi-replica traffic router that feeds measured
+  per-replica tokens/sec into the paper's ``AdaptiveAllocationController``
+  (Algorithm 1 as a serving plug-in) and splits traffic proportionally,
+  with replica add/remove/replace mirroring the elastic runtime.
+"""
+
+from repro.serve.engine import ServeEngine
+from repro.serve.router import EngineReplica, ModelReplica, RouterConfig, TrafficRouter, run_router
+from repro.serve.scheduler import Request, Scheduler, SchedulerConfig, serve_loop
+from repro.serve.workload import WorkloadConfig, from_trace, synthesize
+
+__all__ = [
+    "ServeEngine",
+    "Request",
+    "Scheduler",
+    "SchedulerConfig",
+    "serve_loop",
+    "WorkloadConfig",
+    "synthesize",
+    "from_trace",
+    "RouterConfig",
+    "TrafficRouter",
+    "EngineReplica",
+    "ModelReplica",
+    "run_router",
+]

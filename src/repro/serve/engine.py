@@ -1,0 +1,228 @@
+"""Continuous-batching decode engine.
+
+One engine owns a fixed number of *slots* (the batch dimension of a per-slot
+cache, ``init_cache(..., per_slot=True)``).  Admission runs the model's
+batched ``prefill`` — one jitted forward over the whole (bucket-padded)
+prompt — then splices the resulting batch-1 cache into the slot; every
+``tick`` runs one jitted ``decode_step`` over all slots and retires the ones
+that hit EOS or their generation budget.  All device computations have
+static shapes: the decode step compiles once per engine, prefill once per
+prompt bucket, the slot splice once — slot membership changes never
+recompile.
+
+Retirement is leak-free by construction: admission overwrites the slot's
+entire cache subtree (KV, positions, recurrent states) with the freshly
+prefilled one, so no state from the previous occupant survives.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_cache, init_params, prefill
+from repro.models.config import ModelConfig
+
+__all__ = ["ServeEngine", "bucket_len"]
+
+
+def bucket_len(n: int, lo: int = 8) -> int:
+    """Smallest power-of-two bucket >= n (>= lo).  Power-of-two buckets keep
+    the per-bucket prefill jit cache small and divide the recurrent chunk
+    sizes (rwkv chunk=32, mamba chunk=256 — both powers of two)."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: int | None = None
+    max_gen: int = 0
+    generated: int = 0
+    out: list = dataclasses.field(default_factory=list)
+    active: bool = False
+
+
+class ServeEngine:
+    """Slot-based continuous batching over one model replica."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params=None,
+        *,
+        n_slots: int = 4,
+        max_seq: int = 64,
+        eos_id: int | None = None,
+        temperature: float = 0.0,
+        seed: int = 0,
+        attn_impl: str = "naive",
+        wkv_impl: str = "chunked",
+        min_bucket: int = 8,
+    ) -> None:
+        self.cfg = cfg
+        self.params = params if params is not None else init_params(cfg, jax.random.PRNGKey(seed))
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.temperature = temperature
+        self.min_bucket = min_bucket
+        self._seed = seed
+        self.slots = [_Slot() for _ in range(n_slots)]
+        self.cache = init_cache(cfg, n_slots, max_seq, per_slot=True)
+        self._fresh1 = init_cache(cfg, 1, max_seq, per_slot=True)  # prefill template
+        self.last_tok = jnp.zeros((n_slots,), jnp.int32)
+        self._key = jax.random.PRNGKey(seed + 1)
+        # counters
+        self.ticks = 0
+        self.prefills = 0
+        self.prefill_tokens = 0
+        self.tokens_out = 0
+        self.active_slot_ticks = 0
+
+        def sample(logits, key):
+            if temperature > 0.0:
+                return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        def decode_fn(params, cache, tok, key):
+            if cfg.embeds_input:
+                inp = jnp.take(params["embed"], tok, axis=0)
+            else:
+                inp = tok
+            logits, cache = decode_step(params, cache, inp, cfg)
+            return cache, sample(logits, key)
+
+        def insert_fn(big, small, last_tok, b, tok):
+            out = {"index": big["index"].at[b].set(small["index"][0])}
+            if "body" in big:
+                out["body"] = jax.tree.map(
+                    lambda g, s: g.at[:, b].set(s[:, 0].astype(g.dtype)), big["body"], small["body"]
+                )
+            if "tail" in big:
+                out["tail"] = jax.tree.map(
+                    lambda g, s: g.at[b].set(s[0].astype(g.dtype)), big["tail"], small["tail"]
+                )
+            return out, last_tok.at[b].set(tok)
+
+        def make_prefill():
+            def fn(params, cache, toks, lengths, key):
+                logits, cache = prefill(params, cache, toks, lengths, cfg, attn_impl, wkv_impl)
+                return cache, sample(logits, key)
+
+            return jax.jit(fn)
+
+        self._decode = jax.jit(decode_fn)
+        self._insert = jax.jit(insert_fn)
+        self._make_prefill = make_prefill
+        self._prefill_by_bucket: dict[int, object] = {}
+
+    def reset(self, seed: int | None = None) -> None:
+        """Return the engine to its just-constructed state (fresh cache, all
+        slots free, counters zeroed) while KEEPING the jit caches — A/B
+        benchmark runs and repeated tests skip recompilation."""
+        if seed is not None:
+            self._seed = seed
+        self.slots = [_Slot() for _ in range(self.n_slots)]
+        self.cache = init_cache(self.cfg, self.n_slots, self.max_seq, per_slot=True)
+        self.last_tok = jnp.zeros((self.n_slots,), jnp.int32)
+        self._key = jax.random.PRNGKey(self._seed + 1)
+        self.ticks = self.prefills = self.prefill_tokens = 0
+        self.tokens_out = self.active_slot_ticks = 0
+
+    # -- state ---------------------------------------------------------------
+
+    @property
+    def has_active(self) -> bool:
+        return any(s.active for s in self.slots)
+
+    @property
+    def free_slots(self) -> list[int]:
+        return [b for b, s in enumerate(self.slots) if not s.active]
+
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    # -- admission -----------------------------------------------------------
+
+    def admit(self, rid: int, prompt: np.ndarray, max_gen: int) -> tuple[int, tuple | None]:
+        """Prefill ``prompt`` into a free slot.  ``prompt``: (L,) int32 token
+        ids, or (L, d) float embeddings for ``cfg.embeds_input`` archs.
+        Returns (slot, finished) where ``finished`` is ``(rid, tokens)`` if
+        the request already retired at admission (max_gen == 1 or instant
+        EOS), else None."""
+        free = self.free_slots
+        if not free:
+            raise RuntimeError("no free slot — admission must be gated on free_slots")
+        L = int(prompt.shape[0])
+        if max_gen < 1:
+            raise ValueError("max_gen must be >= 1")
+        if L < 1 or L + max_gen > self.max_seq:
+            raise ValueError(f"prompt_len {L} + max_gen {max_gen} exceeds max_seq {self.max_seq}")
+        b = free[0]
+        bucket = bucket_len(L, self.min_bucket)
+        if self.cfg.embeds_input:
+            padded = np.zeros((1, bucket, prompt.shape[1]), np.float32)
+            padded[0, :L] = prompt
+        else:
+            padded = np.zeros((1, bucket), np.int32)
+            padded[0, :L] = prompt
+        fn = self._prefill_by_bucket.get(bucket)
+        if fn is None:
+            fn = self._prefill_by_bucket[bucket] = self._make_prefill()
+        small, tok = fn(self.params, self._fresh1, jnp.asarray(padded), jnp.array([L], jnp.int32), self._next_key())
+        self.cache, self.last_tok = self._insert(self.cache, small, self.last_tok, b, tok[0])
+        first = int(tok[0])
+        st = self.slots[b]
+        st.rid, st.max_gen, st.generated, st.out, st.active = rid, max_gen, 1, [first], True
+        self.prefills += 1
+        self.prefill_tokens += L
+        self.tokens_out += 1
+        if (self.eos_id is not None and first == self.eos_id) or st.generated >= st.max_gen:
+            st.active = False
+            return b, (rid, st.out)
+        return b, None
+
+    # -- decode --------------------------------------------------------------
+
+    def tick(self) -> list[tuple]:
+        """One decode step over all slots; returns [(rid, tokens), ...] for
+        requests that retired this tick."""
+        n_active = sum(s.active for s in self.slots)
+        self.cache, tok = self._decode(self.params, self.cache, self.last_tok, self._next_key())
+        self.last_tok = tok
+        self.ticks += 1
+        self.active_slot_ticks += n_active
+        tok_host = np.asarray(tok)
+        finished = []
+        for b, st in enumerate(self.slots):
+            if not st.active:
+                continue
+            t = int(tok_host[b])
+            st.out.append(t)
+            st.generated += 1
+            self.tokens_out += 1
+            if (self.eos_id is not None and t == self.eos_id) or st.generated >= st.max_gen:
+                st.active = False
+                finished.append((st.rid, st.out))
+        return finished
+
+    # -- reporting -----------------------------------------------------------
+
+    def metrics(self) -> dict:
+        return {
+            "n_slots": self.n_slots,
+            "ticks": self.ticks,
+            "prefills": self.prefills,
+            "prefill_tokens": self.prefill_tokens,
+            "tokens_out": self.tokens_out,
+            "slot_utilization": (
+                self.active_slot_ticks / (self.ticks * self.n_slots) if self.ticks else 0.0
+            ),
+        }

@@ -1,0 +1,379 @@
+"""Heterogeneity-aware traffic router — the paper's allocator as a plug-in.
+
+The paper closes by claiming the adaptive allocation algorithm "can be used
+as a plug-in for AllReduce and its variant algorithms".  Serving realizes
+the same claim for inference: replace per-worker *microbatch counts* with
+per-replica *traffic shares*, and per-worker gradient-compute times with
+measured per-replica tokens/sec.  The controller is literally the training
+one (``AdaptiveAllocationController``): each observation window we convert
+the measured speed v_i into the time t_i = w_i / v_i that replica i would
+need for its current share w_i — exactly the timing interface the training
+loop feeds — and the eq. 10 update returns the next share vector.
+
+Replicas run on *virtual clocks*: a real (or modeled) engine processes real
+tokens, but a tick costs ``1/speed`` virtual seconds on a replica of
+relative ``speed`` — the same modeled-hardware device this repo uses for
+heterogeneous training on one CPU (``core/hetero.py``).  Replica
+add/remove/replace mirror the elastic runtime's fig. 11 membership changes,
+warm-starting the controller with measured survivor speeds via ``resize``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.controller import AdaptiveAllocationController, ControllerConfig
+from repro.serve.scheduler import Request
+
+__all__ = ["RouterConfig", "TrafficRouter", "EngineReplica", "ModelReplica", "run_router"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    policy: str = "adaptive"  # "adaptive" (Algorithm 1) or "equal" (baseline)
+    total_shares: int = 32  # the controller's C — granularity of the split
+    window: int = 8  # assignments between controller observations
+    ema_beta: float = 0.3
+
+    def __post_init__(self) -> None:
+        if self.policy not in ("adaptive", "equal"):
+            raise ValueError(f"unknown router policy {self.policy!r}")
+        if self.window < 1:
+            raise ValueError("window must be >= 1")
+
+
+class TrafficRouter:
+    """Weighted-deficit request assignment driven by controller shares."""
+
+    def __init__(self, n_replicas: int, config: RouterConfig | None = None) -> None:
+        self.config = config or RouterConfig()
+        self._ctl: AdaptiveAllocationController | None = None
+        if self.config.policy == "adaptive":
+            self._ctl = AdaptiveAllocationController(
+                ControllerConfig(
+                    total=self.config.total_shares,
+                    n_workers=n_replicas,
+                    ema_beta=self.config.ema_beta,
+                )
+            )
+        self.n = n_replicas
+        self.shares = np.full(n_replicas, 1.0 / n_replicas)
+        self._credits = np.zeros(n_replicas)
+        self._last_v: np.ndarray | None = None
+        self.shares_history: list[list[float]] = [self.shares.tolist()]
+
+    def route(self) -> int:
+        """Pick the replica for the next request (deficit round-robin: exact
+        proportional split in the long run, no starvation)."""
+        self._credits += self.shares
+        i = int(np.argmax(self._credits))
+        self._credits[i] -= 1.0
+        return i
+
+    def observe(self, tok_per_s: list) -> None:
+        """Feed one window's measured per-replica tokens/sec (None for a
+        replica idle in the window — its last known speed is reused)."""
+        if self._ctl is None:
+            return
+        v = np.array(
+            [
+                m if m is not None and m > 0 else (self._last_v[i] if self._last_v is not None else 0.0)
+                for i, m in enumerate(tok_per_s)
+            ],
+            np.float64,
+        )
+        if np.any(v <= 0):  # no measurement yet for some replica: keep shares
+            return
+        self._last_v = v
+        w = self._ctl.allocation.astype(np.float64)
+        alloc = self._ctl.observe(np.maximum(w, 1.0) / v)  # t_i = w_i / v_i
+        self.shares = alloc / alloc.sum()
+        self.shares_history.append(self.shares.tolist())
+
+    def resize(self, n_replicas: int, carry_tok_per_s: list | None = None) -> None:
+        """Membership change (add/remove/replace): re-target the controller,
+        warm-starting from measured survivor speeds when provided."""
+        if self._ctl is not None:
+            alloc = self._ctl.resize(n_replicas, carry_speeds=carry_tok_per_s)
+            self.shares = alloc / alloc.sum()
+        else:
+            self.shares = np.full(n_replicas, 1.0 / n_replicas)
+        self.n = n_replicas
+        self._credits = np.zeros(n_replicas)
+        self._last_v = None
+        self.shares_history.append(self.shares.tolist())
+
+
+# ---------------------------------------------------------------------------
+# replicas (virtual-clock serving workers)
+# ---------------------------------------------------------------------------
+
+
+class _ReplicaBase:
+    """Slot bookkeeping + virtual clock shared by engine-backed and modeled
+    replicas.  ``speed`` scales virtual time: a decode tick costs 1/speed,
+    a prefill of L tokens costs prefill_cost_per_token * L / speed."""
+
+    def __init__(self, name: str, speed: float, prefill_cost_per_token: float = 0.05) -> None:
+        if speed <= 0:
+            raise ValueError("speed must be positive")
+        self.name = name
+        self.speed = speed
+        self.prefill_cost_per_token = prefill_cost_per_token
+        self.clock = 0.0
+        self.busy = 0.0
+        self.tokens_done = 0
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self._by_rid: dict[int, Request] = {}
+        self._win_tokens0 = 0
+        self._win_busy0 = 0.0
+
+    # subclass interface ----------------------------------------------------
+
+    def _has_active(self) -> bool:
+        raise NotImplementedError
+
+    def _can_admit(self) -> bool:
+        raise NotImplementedError
+
+    def _admit(self, req: Request) -> list[tuple]:
+        """Returns [(rid, n_tokens)] finished at admission."""
+        raise NotImplementedError
+
+    def _tick(self) -> tuple[int, list[tuple]]:
+        """Returns (tokens_produced, [(rid, n_tokens) finished])."""
+        raise NotImplementedError
+
+    # driver ----------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        if not self._has_active() and not self.queue:
+            self.clock = max(self.clock, req.arrival)  # idle replica wakes at arrival
+        self.queue.append(req)
+        self._by_rid[req.rid] = req
+
+    def _complete(self, rid: int, n_tokens: int) -> None:
+        r = self._by_rid.pop(rid)
+        r.t_finish = self.clock
+        if r.output is None:
+            r.output = [0] * n_tokens  # modeled replicas synthesize token counts only
+        self.finished.append(r)
+
+    def _step(self) -> None:
+        while self.queue and self._can_admit():
+            req = self.queue.pop(0)
+            req.t_admit = self.clock
+            cost = self.prefill_cost_per_token * len(req.prompt) / self.speed
+            self.clock += cost
+            self.busy += cost
+            for rid, n in self._admit(req):
+                self._complete(rid, n)
+        if self._has_active():
+            made, fins = self._tick()
+            dt = 1.0 / self.speed
+            self.clock += dt
+            self.busy += dt
+            self.tokens_done += made
+            for rid, n in fins:
+                self._complete(rid, n)
+
+    def run_until(self, t: float) -> None:
+        while self.clock < t and (self.queue or self._has_active()):
+            self._step()
+
+    def drain(self) -> None:
+        while self.queue or self._has_active():
+            self._step()
+
+    # measurement -----------------------------------------------------------
+
+    def harvest_window(self) -> float | None:
+        """Measured tokens/sec (virtual) since the last harvest; None if the
+        replica did no work in the window."""
+        dt_tok = self.tokens_done - self._win_tokens0
+        dt_busy = self.busy - self._win_busy0
+        self._win_tokens0 = self.tokens_done
+        self._win_busy0 = self.busy
+        if dt_tok <= 0 or dt_busy <= 0:
+            return None
+        return dt_tok / dt_busy
+
+    def lifetime_tok_per_s(self) -> float | None:
+        return self.tokens_done / self.busy if self.busy > 0 and self.tokens_done > 0 else None
+
+
+class EngineReplica(_ReplicaBase):
+    """A real ``ServeEngine`` behind a virtual clock: tokens are actually
+    generated by the model; only the *time* they take is scaled by speed."""
+
+    def __init__(self, name: str, engine, speed: float = 1.0, prefill_cost_per_token: float = 0.05):
+        super().__init__(name, speed, prefill_cost_per_token)
+        self.engine = engine
+
+    def _has_active(self) -> bool:
+        return self.engine.has_active
+
+    def _can_admit(self) -> bool:
+        return bool(self.engine.free_slots)
+
+    def _admit(self, req: Request) -> list[tuple]:
+        _, fin = self.engine.admit(req.rid, req.prompt, req.max_gen)
+        if fin is not None:
+            rid, toks = fin
+            self._by_rid[rid].output = list(toks)
+            return [(rid, len(toks))]
+        return []
+
+    def _tick(self) -> tuple[int, list[tuple]]:
+        before = self.engine.tokens_out
+        fins = self.engine.tick()
+        out = []
+        for rid, toks in fins:
+            self._by_rid[rid].output = list(toks)
+            out.append((rid, len(toks)))
+        return self.engine.tokens_out - before, out
+
+
+class ModelReplica(_ReplicaBase):
+    """Pure speed-model replica (no engine): each active slot yields one
+    token per tick.  Used by unit tests and quick router studies where only
+    traffic dynamics matter."""
+
+    def __init__(self, name: str, speed: float = 1.0, n_slots: int = 4, prefill_cost_per_token: float = 0.05):
+        super().__init__(name, speed, prefill_cost_per_token)
+        self.n_slots = n_slots
+        self._active: dict[int, tuple[int, int]] = {}  # rid -> (remaining, total)
+
+    def _has_active(self) -> bool:
+        return bool(self._active)
+
+    def _can_admit(self) -> bool:
+        return len(self._active) < self.n_slots
+
+    def _admit(self, req: Request) -> list[tuple]:
+        if req.max_gen <= 1:
+            self.tokens_done += 1
+            return [(req.rid, 1)]
+        self._active[req.rid] = (req.max_gen - 1, req.max_gen)
+        self.tokens_done += 1  # prefill emits the first token
+        return []
+
+    def _tick(self) -> tuple[int, list[tuple]]:
+        made = len(self._active)
+        fins = []
+        for rid in list(self._active):
+            rem, total = self._active[rid]
+            rem -= 1
+            if rem <= 0:
+                del self._active[rid]
+                fins.append((rid, total))
+            else:
+                self._active[rid] = (rem, total)
+        return made, fins
+
+
+# ---------------------------------------------------------------------------
+# routed serving run (with elastic membership events)
+# ---------------------------------------------------------------------------
+
+
+def _apply_event(ev: dict, replicas: list, router: TrafficRouter, make_replica, graveyard: list) -> None:
+    """Membership event at assignment time: {"at": k, "kind": "add"|"remove"|
+    "replace", ...}.  Affected replicas drain first (graceful decommission)
+    and retire into ``graveyard`` so their work stays in the accounting,
+    then the controller re-targets with measured survivor speeds — the
+    serving mirror of the elastic runtime's fig. 11 scenarios."""
+    kind = ev["kind"]
+    if kind == "replace":
+        i = ev["index"]
+        replicas[i].drain()
+        carried = [r.lifetime_tok_per_s() for r in replicas]
+        known = [c for c in carried if c]
+        mean_v = sum(known) / len(known) if known else 1.0
+        old = replicas[i]
+        graveyard.append(old)
+        replicas[i] = make_replica(ev.get("name", f"{old.name}+"), ev["speed"])
+        replicas[i].clock = old.clock
+        carried[i] = mean_v  # newcomer starts at fleet-mean speed estimate
+        router.resize(len(replicas), [c if c else mean_v for c in carried])
+    elif kind == "add":
+        carried = [r.lifetime_tok_per_s() for r in replicas]
+        known = [c for c in carried if c]
+        mean_v = sum(known) / len(known) if known else 1.0
+        replicas.append(make_replica(ev.get("name", f"replica{len(replicas)}"), ev["speed"]))
+        router.resize(len(replicas), [*(c if c else mean_v for c in carried), mean_v])
+    elif kind == "remove":
+        i = ev["index"]
+        replicas[i].drain()
+        graveyard.append(replicas.pop(i))
+        carried = [r.lifetime_tok_per_s() for r in replicas]
+        known = [c for c in carried if c]
+        mean_v = sum(known) / len(known) if known else 1.0
+        router.resize(len(replicas), [c if c else mean_v for c in carried])
+    else:
+        raise ValueError(f"unknown membership event kind {kind!r}")
+
+
+def run_router(
+    replicas: list,
+    requests: list[Request],
+    config: RouterConfig | None = None,
+    events: list[dict] | None = None,
+    make_replica=None,
+) -> dict:
+    """Route ``requests`` across ``replicas`` and drain.
+
+    ``events``: membership changes keyed on assignment index (see
+    ``_apply_event``); requires ``make_replica(name, speed)`` for add/replace.
+    Returns summary metrics incl. the share trajectory."""
+    config = config or RouterConfig()
+    router = TrafficRouter(len(replicas), config)
+    events = sorted(events or [], key=lambda e: e["at"])
+    ev_i = 0
+    graveyard: list = []
+    for k, req in enumerate(sorted(requests, key=lambda r: r.arrival)):
+        while ev_i < len(events) and events[ev_i]["at"] <= k:
+            _apply_event(events[ev_i], replicas, router, make_replica, graveyard)
+            ev_i += 1
+        for r in replicas:
+            r.run_until(req.arrival)
+        replicas[router.route()].submit(req)
+        if (k + 1) % config.window == 0:
+            router.observe([r.harvest_window() for r in replicas])
+    while ev_i < len(events):  # events past the last assignment
+        _apply_event(events[ev_i], replicas, router, make_replica, graveyard)
+        ev_i += 1
+    for r in replicas:
+        r.drain()
+
+    fleet = [*replicas, *graveyard]
+    done = [r for rep in fleet for r in rep.finished]
+    lat = np.array([r.latency for r in done], np.float64)
+    total_tokens = sum(rep.tokens_done for rep in fleet)
+    makespan = max((rep.clock for rep in fleet), default=0.0)
+    return {
+        "policy": config.policy,
+        "replicas": [
+            {
+                "name": rep.name,
+                "speed": rep.speed,
+                "tokens": rep.tokens_done,
+                "busy": round(rep.busy, 3),
+                "tok_per_s": round(rep.lifetime_tok_per_s() or 0.0, 3),
+                "completed": len(rep.finished),
+                "retired": rep in graveyard,
+            }
+            for rep in fleet
+        ],
+        "completed": len(done),
+        "total_tokens": total_tokens,
+        "makespan": round(makespan, 3),
+        "throughput_tok_per_s": round(total_tokens / makespan, 3) if makespan > 0 else None,
+        "latency_p50": float(np.percentile(lat, 50)) if lat.size else None,
+        "latency_p95": float(np.percentile(lat, 95)) if lat.size else None,
+        "final_shares": router.shares.tolist(),
+        "shares_history": router.shares_history,
+    }

@@ -1,0 +1,146 @@
+"""Request queue, admission policy, and the serve loop.
+
+Time is measured in *ticks* (one engine decode step == 1.0): deterministic
+on CPU, and the unit the router's virtual clocks scale by replica speed.
+Wall-clock seconds are reported alongside for real-throughput numbers.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+
+import numpy as np
+
+__all__ = ["Request", "SchedulerConfig", "Scheduler", "serve_loop", "summarize"]
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``prompt``: (L,) int32 token ids (or (L, d)
+    float32 embeddings for embeds-input archs)."""
+
+    rid: int
+    prompt: np.ndarray
+    max_gen: int
+    arrival: float = 0.0
+    # filled by the serve loop:
+    output: list | None = None
+    t_admit: float | None = None
+    t_finish: float | None = None
+
+    @property
+    def latency(self) -> float | None:
+        return None if self.t_finish is None else self.t_finish - self.arrival
+
+    @property
+    def wait(self) -> float | None:
+        return None if self.t_admit is None else self.t_admit - self.arrival
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """FIFO admission policy.
+
+    max_waiting_prefill   admissions (prefills) per tick in continuous mode —
+                          bounds how long decode stalls behind prefill work.
+    continuous            False: static-batch baseline — admit only when the
+                          engine is fully idle, then fill every slot (the old
+                          serve driver's behavior, kept as the bench baseline).
+    """
+
+    max_waiting_prefill: int = 2
+    continuous: bool = True
+
+    def __post_init__(self) -> None:
+        if self.max_waiting_prefill < 1:
+            raise ValueError("max_waiting_prefill must be >= 1 (0 would stall admission forever)")
+
+
+class Scheduler:
+    """FIFO queue + admission.  Retirement (EOS / max_gen) lives in the
+    engine; the scheduler decides only who enters a slot and when."""
+
+    def __init__(self, config: SchedulerConfig | None = None) -> None:
+        self.config = config or SchedulerConfig()
+        self.queue: collections.deque[Request] = collections.deque()
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def admit(self, engine, now: float) -> list[tuple]:
+        """Admit FIFO-ordered requests into free slots; returns [(rid, tokens)]
+        for requests that finished already at admission."""
+        cfg = self.config
+        if not cfg.continuous and engine.has_active:
+            return []
+        cap = cfg.max_waiting_prefill if cfg.continuous else engine.n_slots
+        finished = []
+        admits = 0
+        while self.queue and engine.free_slots and admits < cap:
+            req = self.queue.popleft()
+            _, fin = engine.admit(req.rid, req.prompt, req.max_gen)
+            req.t_admit = now
+            admits += 1
+            if fin is not None:
+                finished.append(fin)
+        return finished
+
+
+def serve_loop(engine, requests: list[Request], config: SchedulerConfig | None = None) -> dict:
+    """Drive ``engine`` through ``requests`` (arrivals in tick time).
+
+    Mutates each request's ``output``/``t_admit``/``t_finish`` in place and
+    returns ``summarize(...)`` of the run."""
+    sched = Scheduler(config)
+    pending = collections.deque(sorted(requests, key=lambda r: r.arrival))
+    by_rid = {r.rid: r for r in requests}
+    if len(by_rid) != len(requests):
+        raise ValueError("duplicate request ids")
+    clock = 0.0
+    t0 = time.time()
+
+    def complete(rid: int, toks: list, now: float) -> None:
+        r = by_rid[rid]
+        r.output = toks
+        r.t_finish = now
+
+    while pending or sched.queue or engine.has_active:
+        while pending and pending[0].arrival <= clock + 1e-9:
+            sched.submit(pending.popleft())
+        for rid, toks in sched.admit(engine, clock):
+            complete(rid, toks, clock)
+        if engine.has_active:
+            clock += 1.0
+            for rid, toks in engine.tick():
+                complete(rid, toks, clock)
+        elif pending:
+            clock = max(clock, pending[0].arrival)
+        elif sched.queue:  # idle engine + queued work: admit next loop pass
+            continue
+    wall_s = time.time() - t0
+    return summarize(requests, engine, clock, wall_s)
+
+
+def summarize(requests: list[Request], engine, ticks_elapsed: float, wall_s: float) -> dict:
+    lat = np.array([r.latency for r in requests if r.latency is not None], np.float64)
+    wait = np.array([r.wait for r in requests if r.wait is not None], np.float64)
+    gen_tokens = sum(len(r.output) for r in requests if r.output is not None)
+    m = engine.metrics()
+    return {
+        "requests": len(requests),
+        "completed": int((lat >= 0).sum()),
+        "gen_tokens": gen_tokens,
+        "ticks": m["ticks"],
+        "ticks_elapsed": ticks_elapsed,
+        "wall_s": round(wall_s, 3),
+        "throughput_tok_per_s": round(gen_tokens / wall_s, 1) if wall_s > 0 else None,
+        "throughput_tok_per_tick": round(gen_tokens / max(ticks_elapsed, 1e-9), 3),
+        "latency_ticks_p50": float(np.percentile(lat, 50)) if lat.size else None,
+        "latency_ticks_p95": float(np.percentile(lat, 95)) if lat.size else None,
+        "wait_ticks_p50": float(np.percentile(wait, 50)) if wait.size else None,
+        "slot_utilization": round(m["slot_utilization"], 3),
+        "prefills": m["prefills"],
+        "prefill_tokens": m["prefill_tokens"],
+    }

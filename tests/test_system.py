@@ -383,7 +383,12 @@ def test_serve_cli_decodes():
     from repro.launch import serve as serve_cli
 
     res = serve_cli.main(
-        ["--arch", "rwkv6-1.6b", "--smoke", "--batch", "2", "--prompt-len", "8", "--gen", "8"]
+        [
+            "--arch", "rwkv6-1.6b", "--smoke", "--slots", "2", "--requests", "4",
+            "--prompt-lens", "4,8", "--gen-lens", "4,8", "--rate", "0.5",
+        ]
     )
-    assert res["generated"] == 8
-    assert res["decode_tok_per_s"] > 0
+    assert res["mode"] == "continuous"
+    assert res["completed"] == 4
+    assert res["gen_tokens"] > 0 and res["throughput_tok_per_s"] > 0
+    assert 0 < res["slot_utilization"] <= 1
