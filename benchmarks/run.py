@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV.  Sections:
 Usage: PYTHONPATH=src python -m benchmarks.run [--only substring]
        PYTHONPATH=src python -m benchmarks.run --scenario elastic
        PYTHONPATH=src python -m benchmarks.run --scenario serve
+       PYTHONPATH=src python -m benchmarks.run --scenario decode-perf
 
 ``--scenario elastic`` runs the fig. 11 membership experiment END-TO-END
 through the elastic driver (real training steps, simulated speeds): a
@@ -24,6 +25,16 @@ sustain higher aggregate tok/s) and the adaptive traffic router (paper's
 allocator as a serving plug-in: heterogeneous 2-replica cluster, adaptive
 vs equal split — adaptive must win on makespan/p95).  ``--smoke`` shrinks
 the workload for CI.
+
+``--scenario decode-perf`` A/Bs the dense per-slot KV cache against the
+paged layout (page pool + Pallas ragged paged-decode kernel) on one
+mixed-length workload: token output must be identical request-for-request,
+and the analytic decode cost (FLOPs/bytes derived from attended KV
+positions, the same accounting style as ``bench_kernels``) must drop >= 2x
+because paged attends O(live tokens) instead of ``n_slots x max_seq``.
+Also demonstrates the dense layout's hard rejection disappearing: a
+``prompt + max_gen > max_seq`` request completes under the paged engine,
+token-identical to a single-request dense reference.
 """
 
 from __future__ import annotations
@@ -221,6 +232,113 @@ def run_serve_scenario(json_out: str | None, smoke: bool = False) -> dict:
     return bench
 
 
+def run_decode_perf_scenario(json_out: str | None, smoke: bool = False) -> dict:
+    """Dense vs paged decode on identical mixed-length traffic (smoke-scale
+    model on CPU, Pallas kernel in interpret mode).
+
+    The derived FLOPs/bytes columns are ANALYTIC (what the attended KV
+    positions cost on TPU), so the >= 2x acceptance gate is deterministic —
+    interpret-mode wall time is reported but never gated on."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import smoke_config
+    from repro.models import decode_step, init_cache, init_params
+    from repro.serve import Request, SchedulerConfig, ServeEngine, WorkloadConfig, serve_loop, synthesize
+
+    max_seq = 48
+    page_size = 4
+    n_slots = 4
+    cfg = smoke_config("smollm-360m", seq=max_seq + 16)
+    cfg = dataclasses.replace(cfg, param_dtype="float32", compute_dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    wl = WorkloadConfig(
+        n_requests=6 if smoke else 16, rate=0.4, prompt_len=(4, 12), gen_len=(4, 24),
+        vocab_size=cfg.vocab_size, seed=0,
+    )
+
+    engines = {
+        "dense": ServeEngine(cfg, params, n_slots=n_slots, max_seq=max_seq, seed=0),
+        "paged": ServeEngine(
+            cfg, params, n_slots=n_slots, max_seq=max_seq, seed=0,
+            attn_impl="paged", page_size=page_size,
+        ),
+    }
+    outputs, runs = {}, {}
+    for name, eng in engines.items():
+        reqs = synthesize(wl)
+        t0 = time.time()
+        summary = serve_loop(eng, reqs, SchedulerConfig(max_waiting_prefill=2))
+        runs[name] = {
+            "ticks": summary["ticks"],
+            "wall_s": round(time.time() - t0, 3),
+            "attended_key_tokens": eng.attended_key_tokens,
+            "slot_utilization": summary["slot_utilization"],
+        }
+        outputs[name] = {r.rid: r.output for r in reqs}
+    tokens_identical = outputs["dense"] == outputs["paged"]
+
+    # analytic decode cost per engine: attended KV positions x attention
+    # layers x (4*H*Dh flops for qk+pv; k+v unique HBM bytes), as in
+    # bench_kernels' derived columns
+    n_attn = sum(1 for s in cfg.layer_specs() if s.kind == "attn")
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    itemsize = jnp.dtype(cfg.compute_dtype).itemsize
+    for name, r in runs.items():
+        r["analytic_flops"] = r["attended_key_tokens"] * n_attn * H * 4 * Dh
+        r["analytic_hbm_bytes"] = r["attended_key_tokens"] * n_attn * Hkv * Dh * 2 * itemsize
+    reduction = runs["dense"]["analytic_flops"] / runs["paged"]["analytic_flops"]
+
+    # -- beyond-max_seq: the dense layout's hard rejection, gone --------------
+    rng = np.random.default_rng(7)
+    L, G = 12, max_seq - 12 + 24  # prompt + max_gen = 72 > max_seq = 48
+    prompt = rng.integers(0, cfg.vocab_size, L).astype(np.int32)
+    long_req = Request(rid=0, prompt=prompt, max_gen=G)
+    engines["paged"].reset()
+    serve_loop(engines["paged"], [long_req], SchedulerConfig())
+    step = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg))
+    cache = init_cache(cfg, 1, L + G + page_size)
+    lg = None
+    for t in range(L):
+        lg, cache = step(params, cache, jnp.asarray(prompt[None, t]))
+    ref = []
+    for _ in range(G):
+        tok = int(jnp.argmax(lg, axis=-1)[0])
+        ref.append(tok)
+        lg, cache = step(params, cache, jnp.array([tok]))
+    long_ok = long_req.output == ref
+
+    bench = {
+        "scenario": "decode-perf",
+        "arch": cfg.name,
+        "n_slots": n_slots,
+        "max_seq": max_seq,
+        "page_size": page_size,
+        "pool_pages": engines["paged"].layout.n_pages,
+        "n_attn_layers": n_attn,
+        "dense": runs["dense"],
+        "paged": runs["paged"],
+        "tokens_identical": tokens_identical,
+        "analytic_flops_reduction": round(reduction, 3),
+        "long_request": {
+            "prompt_len": L,
+            "max_gen": G,
+            "exceeds_max_seq_by": L + G - max_seq,
+            "completed": long_req.output is not None and len(long_req.output) == G,
+            "matches_dense_reference": long_ok,
+        },
+    }
+    print("BENCH " + json.dumps(bench))
+    if json_out:
+        os.makedirs(os.path.dirname(json_out) or ".", exist_ok=True)
+        with open(json_out, "w") as f:
+            json.dump(bench, f, indent=1)
+    return bench
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="run benches whose name contains this")
@@ -228,7 +346,7 @@ def main() -> None:
     ap.add_argument(
         "--scenario",
         default=None,
-        choices=["elastic", "serve"],
+        choices=["elastic", "serve", "decode-perf"],
         help="run one end-to-end scenario (emits a BENCH json line) instead of the CSV benches",
     )
     ap.add_argument("--smoke", action="store_true", help="shrink the scenario workload (CI)")
@@ -242,6 +360,12 @@ def main() -> None:
     if args.scenario == "serve":
         out = args.json_out or os.path.join(os.path.dirname(__file__), "..", "results", "bench_serve.json")
         run_serve_scenario(out, smoke=args.smoke)
+        return
+    if args.scenario == "decode-perf":
+        out = args.json_out or os.path.join(
+            os.path.dirname(__file__), "..", "results", "bench_decode_perf.json"
+        )
+        run_decode_perf_scenario(out, smoke=args.smoke)
         return
 
     from benchmarks import bench_kernels, paper_figs

@@ -11,6 +11,11 @@ make every slot advance on its own clock.  Families covered:
   * smollm-360m            — GQA KV cache (per-slot position tables)
   * rwkv6-1.6b             — constant-size recurrent state (long-context family)
   * jamba-1.5-large-398b   — hybrid: KV + conv + SSM caches in one stack
+
+The final demo reruns smollm with ``attn_impl="paged"``: same traffic, same
+tokens, but decode runs the Pallas ragged paged-attention kernel over a
+shared page pool — the attended-KV counter drops to O(live tokens), and one
+request generates past ``max_seq`` (impossible under the dense layout).
 """
 
 import numpy as np
@@ -19,9 +24,9 @@ from repro.configs import smoke_config
 from repro.serve import Request, SchedulerConfig, ServeEngine, serve_loop
 
 
-def demo(arch: str, n_slots=2, n_requests=5, max_seq=48):
+def demo(arch: str, n_slots=2, n_requests=5, max_seq=48, **engine_kw):
     cfg = smoke_config(arch, seq=max_seq)
-    engine = ServeEngine(cfg, n_slots=n_slots, max_seq=max_seq, seed=0)
+    engine = ServeEngine(cfg, n_slots=n_slots, max_seq=max_seq, seed=0, **engine_kw)
     rng = np.random.default_rng(1)
     requests = []
     for i in range(n_requests):  # mixed lengths, arrivals staggered every 2 ticks
@@ -38,9 +43,32 @@ def demo(arch: str, n_slots=2, n_requests=5, max_seq=48):
     for r in requests:
         print(f"    req{r.rid}: prompt {len(r.prompt):2d} arrive t={r.arrival:4.1f} "
               f"admit t={r.t_admit:4.1f} finish t={r.t_finish:5.1f} -> {len(r.output)} tokens")
+    return engine
+
+
+def demo_paged(max_seq=24):
+    """Paged KV: decode cost tracks live tokens and generation outruns max_seq."""
+    cfg = smoke_config("smollm-360m", seq=64)
+    engine = ServeEngine(
+        cfg, n_slots=2, max_seq=max_seq, seed=0, attn_impl="paged", page_size=4, pool_pages=24
+    )
+    rng = np.random.default_rng(1)
+    long_gen = max_seq + 8  # 8 + 32 = 40 tokens > max_seq 24: dense would reject
+    requests = [
+        Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32), max_gen=long_gen),
+        Request(rid=1, prompt=rng.integers(0, cfg.vocab_size, 5).astype(np.int32), max_gen=6, arrival=2.0),
+    ]
+    summary = serve_loop(engine, requests, SchedulerConfig(max_waiting_prefill=1))
+    print(
+        f"{'smollm-360m [paged]':28s} req0 generated {len(requests[0].output)} tokens "
+        f"(prompt+gen = {8 + long_gen} > max_seq = {max_seq}); "
+        f"attended KV positions {engine.attended_key_tokens} "
+        f"(dense layout would attend {summary['ticks'] * engine.n_slots * max_seq})"
+    )
 
 
 if __name__ == "__main__":
     demo("smollm-360m")
     demo("rwkv6-1.6b")
     demo("jamba-1.5-large-398b")  # hybrid: KV + conv + ssm caches together
+    demo_paged()

@@ -12,10 +12,11 @@ import os
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _pa
 from repro.kernels import rwkv6_scan as _rw
 from repro.kernels import weighted_accum as _wa
 
-__all__ = ["flash_attention", "rwkv6_scan", "weighted_accum", "weighted_accum_tree"]
+__all__ = ["flash_attention", "paged_attention", "rwkv6_scan", "weighted_accum", "weighted_accum_tree"]
 
 
 def _interpret_default() -> bool:
@@ -31,6 +32,17 @@ def flash_attention(q, k, v, q_pos=None, k_pos=None, *, causal=True, window=None
     interpret = _interpret_default() if interpret is None else interpret
     return _fa.flash_attention(
         q, k, v, causal=causal, window=window, softcap=softcap, q_offset=q_offset, interpret=interpret
+    )
+
+
+def paged_attention(q, k_pool, v_pool, pages, lengths, k_scale=None, v_scale=None, *, window=None, softcap=0.0, interpret=None):
+    """Ragged paged-decode attention (one query token per slot vs paged KV).
+
+    See ``repro.kernels.paged_attention`` for the layout contract."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _pa.paged_attention(
+        q, k_pool, v_pool, pages, lengths, k_scale, v_scale,
+        window=window, softcap=softcap, interpret=interpret,
     )
 
 

@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["flash_attention_ref", "rwkv6_scan_ref", "weighted_accum_ref"]
+__all__ = ["flash_attention_ref", "paged_attention_ref", "rwkv6_scan_ref", "weighted_accum_ref"]
 
 NEG_INF = -2.0e38
 
@@ -48,6 +48,55 @@ def flash_attention_ref(
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
     return out.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def paged_attention_ref(
+    q: jnp.ndarray,  # (B, H, Dh)
+    k_pool: jnp.ndarray,  # (n_pages + 1, page_size, Hkv, Dh)
+    v_pool: jnp.ndarray,  # (n_pages + 1, page_size, Hkv, Dh)
+    pages: jnp.ndarray,  # (B, num_page_slots) int32, -1 = unallocated
+    lengths: jnp.ndarray,  # (B,) int32 live tokens per slot
+    k_scale: jnp.ndarray | None = None,  # (n_pages + 1, page_size, Hkv) int8 pools
+    v_scale: jnp.ndarray | None = None,
+    *,
+    window: int | None = None,
+    softcap: float = 0.0,
+) -> jnp.ndarray:
+    """Gather-then-attend oracle for the paged decode kernel: materialize each
+    slot's logical KV sequence from its page table, then run the dense masked
+    softmax.  Slot b's position p lives in page ``pages[b, p // page_size]``
+    at offset ``p % page_size``; it attends positions 0..lengths[b]-1 (its
+    query sits at position lengths[b]-1)."""
+    B, H, Dh = q.shape
+    n_pages_p1, page_size, Hkv, _ = k_pool.shape
+    S = pages.shape[1] * page_size
+    G = H // Hkv
+    pos = jnp.arange(S)
+    pg = pages[:, pos // page_size]  # (B, S)
+    safe = jnp.where(pg < 0, n_pages_p1 - 1, pg)
+    off = pos % page_size
+
+    def gather(pool):
+        return pool[safe, off[None, :]].astype(jnp.float32)  # (B, S, Hkv, Dh)
+
+    k = gather(k_pool)
+    v = gather(v_pool)
+    if k_pool.dtype == jnp.int8:
+        k = k * k_scale[safe, off[None, :]].astype(jnp.float32)[..., None]
+        v = v * v_scale[safe, off[None, :]].astype(jnp.float32)[..., None]
+    qg = q.reshape(B, 1, Hkv, G, Dh).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k) * (Dh**-0.5)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = (pg >= 0) & (pos[None, :] < lengths[:, None])
+    if window is not None:
+        valid &= pos[None, :] > (lengths[:, None] - 1 - window)
+    s = jnp.where(valid[:, None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked slot (lengths == 0): zero output, matching the kernel
+    p = jnp.where(valid[:, None, None, None], p, 0.0)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    return out.reshape(B, H, Dh).astype(q.dtype)
 
 
 def rwkv6_scan_ref(r, k, v, w, u, s0=None):

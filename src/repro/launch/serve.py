@@ -8,9 +8,18 @@ old driver implemented (admit a full batch, drain, repeat) for A/B runs;
 ``benchmarks/run.py --scenario serve`` does that comparison plus the
 adaptive-router experiment end-to-end.
 
+``--attn-impl`` selects the attention path end-to-end: ``naive``/``blocked``/
+``flash`` pick the prefill implementation over the dense per-slot cache
+(``flash`` runs the Pallas flash kernel, interpret-mode on CPU), and
+``paged`` switches the whole KV layout to the shared page pool + Pallas
+ragged paged-decode kernel — decode cost proportional to live tokens, and
+``prompt + max_gen`` may exceed ``--max-seq`` (pool-bounded instead).
+
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
       --slots 4 --requests 8 --prompt-lens 4,16 --gen-lens 8,24
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
+      --attn-impl paged --page-size 8 --slots 8 --requests 16
 """
 
 from __future__ import annotations
@@ -45,6 +54,18 @@ def main(argv=None) -> dict:
     ap.add_argument("--rate", type=float, default=0.0, help="Poisson arrivals per tick; 0 = all at t=0")
     ap.add_argument("--max-seq", type=int, default=0, help="cache length (0 = prompt_max + gen_max)")
     ap.add_argument("--max-prefills-per-tick", type=int, default=2)
+    ap.add_argument(
+        "--attn-impl",
+        default="naive",
+        choices=["naive", "blocked", "flash", "paged"],
+        help="prefill attention impl; 'paged' also switches the KV layout to "
+        "the shared page pool + Pallas paged-decode kernel",
+    )
+    ap.add_argument("--page-size", type=int, default=8, help="tokens per KV page (paged impl)")
+    ap.add_argument(
+        "--pool-pages", type=int, default=0,
+        help="shared pool size in pages (0 = match the dense footprint: slots*max_seq tokens)",
+    )
     ap.add_argument("--static", action="store_true", help="static-batch baseline (admit only when idle)")
     ap.add_argument("--temperature", type=float, default=0.0, help="0 = greedy")
     ap.add_argument("--eos-id", type=int, default=None)
@@ -53,13 +74,19 @@ def main(argv=None) -> dict:
     args = ap.parse_args(argv)
 
     worst_case = args.prompt_lens[1] + args.gen_lens[1]
+    paged = args.attn_impl == "paged"
     max_seq = args.max_seq or worst_case
-    if max_seq < worst_case:
+    if paged:
+        # paged admission is pool-bounded: only the PROMPT must fit the
+        # prefill buffer; generation may run past max_seq
+        if max_seq < args.prompt_lens[1]:
+            ap.error(f"--max-seq {max_seq} < prompt_max {args.prompt_lens[1]}")
+    elif max_seq < worst_case:
         ap.error(
             f"--max-seq {max_seq} < prompt_max + gen_max = {worst_case}: "
             "the longest request could not be admitted"
         )
-    cfg = smoke_config(args.arch, seq=max_seq) if args.smoke else get_config(args.arch)
+    cfg = smoke_config(args.arch, seq=max(max_seq, worst_case)) if args.smoke else get_config(args.arch)
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
     engine = ServeEngine(
         cfg,
@@ -69,7 +96,15 @@ def main(argv=None) -> dict:
         eos_id=args.eos_id,
         temperature=args.temperature,
         seed=args.seed,
+        attn_impl=args.attn_impl,
+        page_size=args.page_size,
+        pool_pages=args.pool_pages or None,
     )
+    if paged and not engine.admissible(args.prompt_lens[1], args.gen_lens[1]):
+        ap.error(
+            f"worst-case request ({args.prompt_lens[1]} + {args.gen_lens[1]} tokens) "
+            f"does not fit the page pool — raise --pool-pages"
+        )
     wl = WorkloadConfig(
         n_requests=args.requests,
         rate=args.rate,
@@ -87,11 +122,15 @@ def main(argv=None) -> dict:
     result = {
         "arch": cfg.name,
         "mode": "static" if args.static else "continuous",
+        "attn_impl": args.attn_impl,
         "slots": args.slots,
         "max_seq": max_seq,
         **summary,
         "sample_tokens": (requests[0].output or [])[:8],
     }
+    if engine.pool is not None:
+        result["pool"] = engine.pool.metrics()
+        result["attended_key_tokens"] = engine.attended_key_tokens
     print(json.dumps(result, indent=1))
     if args.json_out:
         with open(args.json_out, "w") as f:

@@ -1,5 +1,6 @@
 """Pure-JAX model zoo covering all assigned architectures."""
 
+from repro.models.attention import PagedLayout
 from repro.models.config import LayerSpec, MambaConfig, ModelConfig, MoEConfig, RWKVConfig
 from repro.models.transformer import (
     decode_step,
@@ -16,6 +17,7 @@ __all__ = [
     "MambaConfig",
     "ModelConfig",
     "MoEConfig",
+    "PagedLayout",
     "RWKVConfig",
     "decode_step",
     "forward",

@@ -15,6 +15,7 @@ q is viewed as (B, S, Hkv, G, Dh) and contracted against k (B, S, Hkv, Dh).
 
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 from typing import Any
 
@@ -25,9 +26,46 @@ from repro.models.config import ModelConfig
 from repro.models.layers import dense_init, linear, rmsnorm, rmsnorm_init
 from repro.models.rope import apply_rope
 
-__all__ = ["init_attention", "attention_train", "attention_decode", "attention_prefill"]
+__all__ = [
+    "PagedLayout",
+    "init_attention",
+    "attention_train",
+    "attention_decode",
+    "attention_prefill",
+]
 
 NEG_INF = -2.0e38  # large finite; avoids NaN from (-inf) - (-inf)
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Paged KV-cache geometry (see ``repro.kernels.paged_attention``).
+
+    ``n_pages`` fixed-size pages (of ``page_size`` tokens each) live in one
+    pool shared by every slot; each slot addresses up to ``pages_per_slot``
+    of them through its page-table row, so a slot's context is bounded by
+    pool capacity — not by a per-slot ``max_seq`` reservation.  Pools are
+    allocated with one extra trailing *scratch* page that absorbs writes
+    from slots with no allocated page (inactive slots keep decoding)."""
+
+    page_size: int = 8
+    n_pages: int = 32
+    pages_per_slot: int = 0  # 0 -> n_pages (a slot may use the whole pool)
+
+    def __post_init__(self) -> None:
+        if self.page_size < 1 or self.n_pages < 1:
+            raise ValueError(f"bad paged layout {self}")
+        if self.pages_per_slot == 0:
+            object.__setattr__(self, "pages_per_slot", self.n_pages)
+        if self.pages_per_slot > self.n_pages:
+            raise ValueError("pages_per_slot cannot exceed n_pages")
+
+    @property
+    def max_tokens_per_slot(self) -> int:
+        return self.pages_per_slot * self.page_size
+
+    def pages_for(self, tokens: int) -> int:
+        return -(-tokens // self.page_size)
 
 
 def init_attention(key: jax.Array, cfg: ModelConfig) -> dict[str, Any]:
@@ -201,9 +239,16 @@ def attention_decode(
     (windowed local-attention cache): entries live at slot ``pos % S_cache``
     and ``pos`` records each slot's absolute position (-1 = empty), so
     masking is exact across wraparound.  Returns (out (B,1,d), new cache).
+
+    Paged layout: when the cache carries pools (``k_pool``/``v_pool``) and a
+    page table (``pages``), the new token's K/V scatters into the slot's
+    current page and attention runs through the Pallas ragged paged kernel —
+    per-slot cost proportional to live tokens (see ``_decode_paged``).
     """
     B, one, _ = x.shape
     assert one == 1, "decode expects a single new token"
+    if "k_pool" in cache:
+        return _decode_paged(p, x, cache, cfg, attn_type)
     index = cache["index"]
     per_slot = index.ndim == 1
     if per_slot:
@@ -262,6 +307,76 @@ def attention_decode(
         new_cache.update(k=k_i, v=v_i, k_scale=ks, v_scale=vs)
     else:
         new_cache.update(k=k, v=v)
+    return linear(out.astype(x.dtype), p["wo"]), new_cache
+
+
+def _decode_paged(
+    p: dict,
+    x: jnp.ndarray,
+    cache: dict,
+    cfg: ModelConfig,
+    attn_type: str,
+) -> tuple[jnp.ndarray, dict]:
+    """One-token decode against a paged KV pool.
+
+    cache: {"k_pool","v_pool": (n_pages+1, page_size, Hkv, Dh) [+ int8 scale
+    pools], "pages": (B, P_max) int32, "index": (B,)}.  The new token's K/V
+    is scattered into the slot's page for position ``index`` (slots without
+    an allocated page — inactive slots — write the trailing scratch page),
+    then the ragged paged-attention kernel attends positions 0..index.
+    Returns (out (B,1,d), new cache pieces {k_pool, v_pool[, scales]})."""
+    B = x.shape[0]
+    index = cache["index"]
+    pages = cache["pages"]
+    assert index.ndim == 1, "paged decode requires a per-slot cache (index (B,))"
+    positions = index[:, None]
+    q, k_new, v_new = _qkv(p, x, cfg, positions)
+
+    k_pool = cache["k_pool"]
+    page_size = k_pool.shape[1]
+    scratch_page = k_pool.shape[0] - 1
+    bidx = jnp.arange(B)
+    pslot = jnp.clip(index // page_size, 0, pages.shape[1] - 1)
+    pg = pages[bidx, pslot]
+    # Unallocated (-1) -> scratch page: inactive slots keep decoding but their
+    # writes land in garbage space and their reads are masked by the kernel.
+    dest = jnp.where(pg >= 0, pg, scratch_page)
+    off = index % page_size
+
+    def put(pool, new):  # new: (B, 1, Hkv, ...) -> row-wise scatter into pages
+        return pool.at[dest, off].set(new[:, 0].astype(pool.dtype))
+
+    int8_kv = k_pool.dtype == jnp.int8
+    k_scale = v_scale = None
+    if int8_kv:
+        k_q, k_s = _quant_int8(k_new)
+        v_q, v_s = _quant_int8(v_new)
+        k_pool = put(k_pool, k_q)
+        v_pool = put(cache["v_pool"], v_q)
+        k_scale = put(cache["k_scale_pool"], k_s)
+        v_scale = put(cache["v_scale_pool"], v_s)
+    else:
+        k_pool = put(k_pool, k_new)
+        v_pool = put(cache["v_pool"], v_new)
+
+    from repro.kernels import ops as kops  # lazy: avoid import cycle
+
+    window = cfg.sliding_window if attn_type == "local" else None
+    out = kops.paged_attention(
+        q[:, 0],  # (B, H, Dh)
+        k_pool,
+        v_pool,
+        pages,
+        index + 1,  # live tokens incl. the one just written
+        k_scale,
+        v_scale,
+        window=window,
+        softcap=cfg.attn_logit_softcap,
+    )
+    out = out.reshape(B, 1, cfg.q_dim)
+    new_cache = {"k_pool": k_pool, "v_pool": v_pool}
+    if int8_kv:
+        new_cache.update(k_scale_pool=k_scale, v_scale_pool=v_scale)
     return linear(out.astype(x.dtype), p["wo"]), new_cache
 
 
@@ -330,6 +445,23 @@ def _quant_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     scale = jnp.maximum(amax / 127.0, 1e-8)
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
     return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def init_paged_kv_cache(cfg: ModelConfig, layout: PagedLayout, dtype=None) -> dict:
+    """One attention layer's paged KV pool: ``layout.n_pages`` shared pages
+    plus a trailing scratch page (writes from slots with no allocated page).
+    The page table ("pages") and position clock ("index") are tracked once at
+    the cache's top level — every layer shares the same allocation pattern."""
+    dt = dtype or cfg.dtype("compute")
+    shape = (layout.n_pages + 1, layout.page_size, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.kv_cache_dtype == "int8":
+        return {
+            "k_pool": jnp.zeros(shape, jnp.int8),
+            "v_pool": jnp.zeros(shape, jnp.int8),
+            "k_scale_pool": jnp.zeros(shape[:3], jnp.bfloat16),
+            "v_scale_pool": jnp.zeros(shape[:3], jnp.bfloat16),
+        }
+    return {"k_pool": jnp.zeros(shape, dt), "v_pool": jnp.zeros(shape, dt)}
 
 
 def init_kv_cache(

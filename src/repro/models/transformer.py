@@ -287,8 +287,12 @@ def loss_fn(
 # ---------------------------------------------------------------------------
 
 
-def _init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, max_seq: int, per_slot: bool = False) -> Params:
+def _init_layer_cache(
+    cfg: ModelConfig, spec: LayerSpec, batch: int, max_seq: int, per_slot: bool = False, paged=None
+) -> Params:
     if spec.kind == "attn":
+        if paged is not None:
+            return attn_lib.init_paged_kv_cache(cfg, paged)
         window = cfg.windowed_cache and spec.attn_type == "local"
         c = attn_lib.init_kv_cache(cfg, batch, max_seq, window=window, per_slot=per_slot)
         del c["index"]  # tracked once at the top level
@@ -298,33 +302,50 @@ def _init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, max_seq: in
     return rwkv_lib.init_rwkv_cache(cfg, batch)
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_seq: int, per_slot: bool = False) -> Params:
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, per_slot: bool = False, paged=None) -> Params:
     """``per_slot=True``: the continuous-batching layout — ``index`` is (batch,)
     and attention ``pos`` tables are per-row, so each batch slot admits and
     retires independently (see ``repro.serve.engine``).  The default scalar
-    ``index`` keeps the static lockstep layout."""
+    ``index`` keeps the static lockstep layout.
+
+    ``paged``: an ``attention.PagedLayout`` — attention layers keep shared
+    fixed-size page pools instead of dense (batch, max_seq) buffers, and the
+    cache gains a top-level page table ``pages`` (batch, pages_per_slot)
+    shared by every layer (-1 = unallocated).  Requires ``per_slot=True``;
+    recurrent (mamba/rwkv) layer caches are unchanged (their state is O(1)
+    per slot already)."""
+    if paged is not None and not per_slot:
+        raise ValueError("paged cache layout requires per_slot=True")
     cache: Params = {"index": jnp.zeros((batch,) if per_slot else (), jnp.int32)}
+    if paged is not None:
+        cache["pages"] = jnp.full((batch, paged.pages_per_slot), -1, jnp.int32)
     if cfg.n_repeats > 0:
         per = [
-            {f"layer{i}": _init_layer_cache(cfg, s, batch, max_seq, per_slot) for i, s in enumerate(cfg.block_pattern)}
+            {
+                f"layer{i}": _init_layer_cache(cfg, s, batch, max_seq, per_slot, paged)
+                for i, s in enumerate(cfg.block_pattern)
+            }
             for _ in range(cfg.n_repeats)
         ]
         cache["body"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per) if cfg.n_repeats > 1 else jax.tree.map(lambda x: x[None], per[0])
     if cfg.tail_layers:
         cache["tail"] = {
-            f"layer{i}": _init_layer_cache(cfg, s, batch, max_seq, per_slot) for i, s in enumerate(cfg.tail_layers)
+            f"layer{i}": _init_layer_cache(cfg, s, batch, max_seq, per_slot, paged)
+            for i, s in enumerate(cfg.tail_layers)
         }
     return cache
 
 
-def _decode_layer(p, spec: LayerSpec, h, layer_cache, index, cfg: ModelConfig):
+def _decode_layer(p, spec: LayerSpec, h, layer_cache, index, cfg: ModelConfig, pages=None):
     if spec.kind == "rwkv":
         return rwkv_lib.rwkv_decode(p["rwkv"], h, layer_cache, cfg)
     hi = norm_apply(h, p["norm1"], cfg.norm, cfg.norm_eps)
     if spec.kind == "attn":
         c = dict(layer_cache, index=index)
+        if pages is not None and "k_pool" in layer_cache:
+            c["pages"] = pages
         mix, c2 = attn_lib.attention_decode(p["mixer"], hi, c, cfg, spec.attn_type)
-        new_cache = {k: v for k, v in c2.items() if k != "index"}
+        new_cache = {k: v for k, v in c2.items() if k not in ("index", "pages")}
     else:
         mix, new_cache = mamba_lib.mamba_decode(p["mixer"], hi, layer_cache, cfg)
     if cfg.post_block_norm:
@@ -359,8 +380,11 @@ def decode_step(
         h = h * jnp.asarray(cfg.d_model**0.5, cdt)
     h = _wsc(h, sh.get("h"))
     index = cache["index"]
+    pages = cache.get("pages")  # paged KV layout: (B, P_max) table, else None
 
     new_cache: Params = {"index": index + 1}
+    if pages is not None:
+        new_cache["pages"] = pages  # read-only in the step; the engine owns it
     if cfg.n_repeats > 0:
         # The cache rides in the scan CARRY (not xs/ys): carries can alias
         # in-place, so the multi-GB KV cache is updated rather than copied —
@@ -375,7 +399,7 @@ def decode_step(
             new_block_cache = {}
             for i, spec in enumerate(cfg.block_pattern):
                 key = f"layer{i}"
-                h, nc = _decode_layer(block_params[key], spec, h, block_cache[key], index, cfg)
+                h, nc = _decode_layer(block_params[key], spec, h, block_cache[key], index, cfg, pages)
                 new_block_cache[key] = nc
             body_cache = jax.tree.map(
                 lambda c, n: jax.lax.dynamic_update_index_in_dim(c, n.astype(c.dtype), rep, 0),
@@ -401,7 +425,7 @@ def decode_step(
         new_cache["tail"] = {}
         for i, spec in enumerate(cfg.tail_layers):
             key = f"layer{i}"
-            h, nc = _decode_layer(params["tail"][key], spec, h, cache["tail"][key], index, cfg)
+            h, nc = _decode_layer(params["tail"][key], spec, h, cache["tail"][key], index, cfg, pages)
             new_cache["tail"][key] = nc
 
     h = norm_apply(h, params["final_norm"], cfg.norm, cfg.norm_eps)

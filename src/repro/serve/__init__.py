@@ -6,9 +6,13 @@ Layers (bottom up):
   ``prefill``/``decode_step`` with per-slot cache positions: slots admit and
   retire independently, so a finished request frees its slot immediately
   instead of blocking until the whole batch drains.
+* ``paged``     — paged KV-cache block manager (``attn_impl="paged"``):
+  fixed-size pages in a shared pool with per-slot page tables, so decode
+  cost tracks live tokens and a slot's context is bounded by pool capacity,
+  not ``max_seq`` (Pallas kernel: ``repro.kernels.paged_attention``).
 * ``scheduler`` — request queue + FIFO admission policy (per-tick prefill
-  cap, EOS/length retirement) and the serve loop that drives an engine
-  through a workload.
+  cap, EOS/length retirement, page-pool backpressure) and the serve loop
+  that drives an engine through a workload.
 * ``workload``  — Poisson / trace request synthesis (mixed prompt and
   generation lengths, seeded).
 * ``router``    — multi-replica traffic router that feeds measured
@@ -18,11 +22,14 @@ Layers (bottom up):
 """
 
 from repro.serve.engine import ServeEngine
+from repro.serve.paged import PagedLayout, PagePool
 from repro.serve.router import EngineReplica, ModelReplica, RouterConfig, TrafficRouter, run_router
 from repro.serve.scheduler import Request, Scheduler, SchedulerConfig, serve_loop
 from repro.serve.workload import WorkloadConfig, from_trace, synthesize
 
 __all__ = [
+    "PagePool",
+    "PagedLayout",
     "ServeEngine",
     "Request",
     "Scheduler",

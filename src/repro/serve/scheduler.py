@@ -71,7 +71,13 @@ class Scheduler:
 
     def admit(self, engine, now: float) -> list[tuple]:
         """Admit FIFO-ordered requests into free slots; returns [(rid, tokens)]
-        for requests that finished already at admission."""
+        for requests that finished already at admission.
+
+        Backpressure: if the FIFO head cannot be admitted *right now* (paged
+        engine with an exhausted page pool) it stays queued — head-of-line
+        blocking keeps FIFO fairness — and admission resumes once retiring
+        slots free their pages.  A request the engine could NEVER admit
+        raises immediately instead of stalling the queue forever."""
         cfg = self.config
         if not cfg.continuous and engine.has_active:
             return []
@@ -79,7 +85,16 @@ class Scheduler:
         finished = []
         admits = 0
         while self.queue and engine.free_slots and admits < cap:
-            req = self.queue.popleft()
+            req = self.queue[0]
+            L, G = int(req.prompt.shape[0]), req.max_gen
+            if not engine.can_admit_now(L, G):
+                if not engine.admissible(L, G):
+                    raise ValueError(
+                        f"request {req.rid} (prompt {L}, max_gen {G}) can never be "
+                        "admitted by this engine"
+                    )
+                break  # transient pressure (page pool) — retry next tick
+            self.queue.popleft()
             _, fin = engine.admit(req.rid, req.prompt, req.max_gen)
             req.t_admit = now
             admits += 1
