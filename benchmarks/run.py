@@ -26,6 +26,13 @@ allocator as a serving plug-in: heterogeneous 2-replica cluster, adaptive
 vs equal split — adaptive must win on makespan/p95).  ``--smoke`` shrinks
 the workload for CI.
 
+``--scenario faults`` runs the seeded fault-injection campaign (straggler /
+netdeg / outage scenarios x seeds) through the elastic driver and scores
+recovery_ticks, goodput retention, and allocation re-convergence.  All
+scored metrics derive from seeded simulated timing, so the BENCH json is
+bit-identical across reruns at a fixed ``--campaign-seed`` and CI gates on
+it (determinism by byte-compare + summary floors).
+
 ``--scenario decode-perf`` A/Bs the dense per-slot KV cache against the
 paged layout (page pool + Pallas ragged paged-decode kernel) on one
 mixed-length workload: token output must be identical request-for-request,
@@ -112,6 +119,38 @@ def run_elastic_scenario(json_out: str | None, steps: int = 48) -> dict:
             float(1.0 - (sum(post) / len(post)) / (sum(pre) / len(pre))) if pre and post else None
         ),
     }
+    print("BENCH " + json.dumps(bench))
+    if json_out:
+        os.makedirs(os.path.dirname(json_out) or ".", exist_ok=True)
+        with open(json_out, "w") as f:
+            json.dump(bench, f, indent=1)
+    return bench
+
+
+def run_faults_scenario(
+    json_out: str | None, smoke: bool = False, campaign_seed: int = 0
+) -> dict:
+    """Seeded fault-injection campaign through the elastic driver (simulated
+    heterogeneous timing): straggler onset/recovery, network degradation,
+    correlated outages — swept over seeds, scored on recovery time, goodput
+    retention, and allocation re-convergence (``repro.traces.campaign``).
+
+    Every scored quantity derives from seeded SIMULATED timing, so the BENCH
+    json is bit-identical across reruns at a fixed ``--campaign-seed`` — CI
+    runs the smoke twice and byte-compares, then gates on the summary.
+    ``--smoke`` trims the sweep to the three canonical scenarios x 2 seeds.
+    """
+    from repro.traces.campaign import CampaignConfig, run_campaign
+
+    seeds = (campaign_seed, campaign_seed + 1)
+    if smoke:
+        cfg = CampaignConfig(scenarios=("straggler", "netdeg", "outage"), seeds=seeds)
+    else:
+        cfg = CampaignConfig(
+            scenarios=("straggler", "netdeg", "outage", "mixed", "random"),
+            seeds=seeds + (campaign_seed + 2,),
+        )
+    bench = run_campaign(cfg)
     print("BENCH " + json.dumps(bench))
     if json_out:
         os.makedirs(os.path.dirname(json_out) or ".", exist_ok=True)
@@ -346,13 +385,18 @@ def main() -> None:
     ap.add_argument(
         "--scenario",
         default=None,
-        choices=["elastic", "serve", "decode-perf"],
+        choices=["elastic", "serve", "decode-perf", "faults"],
         help="run one end-to-end scenario (emits a BENCH json line) instead of the CSV benches",
     )
     ap.add_argument("--smoke", action="store_true", help="shrink the scenario workload (CI)")
     ap.add_argument("--json-out", default=None, help="scenario json path (default results/bench_<scenario>.json)")
+    ap.add_argument("--campaign-seed", type=int, default=0, help="base seed for --scenario faults sweeps")
     args = ap.parse_args()
 
+    if args.scenario == "faults":
+        out = args.json_out or os.path.join(os.path.dirname(__file__), "..", "results", "bench_faults.json")
+        run_faults_scenario(out, smoke=args.smoke, campaign_seed=args.campaign_seed)
+        return
     if args.scenario == "elastic":
         out = args.json_out or os.path.join(os.path.dirname(__file__), "..", "results", "bench_elastic.json")
         run_elastic_scenario(out)

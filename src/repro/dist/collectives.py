@@ -268,9 +268,7 @@ def compress_error_feedback(
             _, indices = jax.lax.top_k(jnp.abs(flat), k)
             values = flat[indices].astype(send_dtype)
             leaf = {"values": values, "indices": indices, "shape": tuple(corrected.shape)}
-            decoded = (
-                jnp.zeros_like(flat).at[indices].set(values.astype(jnp.float32)).reshape(corrected.shape)
-            )
+            decoded = jnp.zeros_like(flat).at[indices].set(values.astype(jnp.float32)).reshape(corrected.shape)
         return leaf, corrected - decoded
 
     g_leaves, treedef = jax.tree.flatten(grads)

@@ -15,11 +15,18 @@ adaptive-router experiment end-to-end.
 ragged paged-decode kernel — decode cost proportional to live tokens, and
 ``prompt + max_gen`` may exceed ``--max-seq`` (pool-bounded instead).
 
+``--trace`` replays a cluster trace's task arrivals (``repro.traces``)
+instead of the synthetic Poisson stream — diurnal/bursty arrival shapes and
+per-task prompt/gen lengths come from the trace, token payloads stay
+synthesized from ``--seed``.
+
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
       --slots 4 --requests 8 --prompt-lens 4,16 --gen-lens 8,24
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
       --attn-impl paged --page-size 8 --slots 8 --requests 16
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
+      --trace pai_small --requests 12 --trace-time-scale 0.5
 """
 
 from __future__ import annotations
@@ -66,12 +73,37 @@ def main(argv=None) -> dict:
         "--pool-pages", type=int, default=0,
         help="shared pool size in pages (0 = match the dense footprint: slots*max_seq tokens)",
     )
+    ap.add_argument(
+        "--trace",
+        default=None,
+        help="bundled trace name (e.g. pai_small) or trace json path: replay its "
+        "task arrivals/lengths instead of synthesizing (--requests truncates; "
+        "--trace-time-scale maps trace time onto ticks)",
+    )
+    ap.add_argument("--trace-time-scale", type=float, default=1.0)
     ap.add_argument("--static", action="store_true", help="static-batch baseline (admit only when idle)")
     ap.add_argument("--temperature", type=float, default=0.0, help="0 = greedy")
     ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args(argv)
+
+    trace = None
+    if args.trace:
+        import os.path
+
+        from repro.traces import bundled_trace, load_trace
+
+        try:
+            trace = load_trace(args.trace) if os.path.exists(args.trace) else bundled_trace(args.trace)
+        except (ValueError, FileNotFoundError) as e:
+            ap.error(str(e))
+        tasks = trace.tasks[: args.requests] if args.requests else trace.tasks
+        if not tasks:
+            ap.error(f"trace {trace.name!r} has no tasks")
+        # the admission gates below must see the TRACE's worst case
+        args.prompt_lens = (min(t.prompt_len for t in tasks), max(t.prompt_len for t in tasks))
+        args.gen_lens = (min(t.gen_len for t in tasks), max(t.gen_len for t in tasks))
 
     worst_case = args.prompt_lens[1] + args.gen_lens[1]
     paged = args.attn_impl == "paged"
@@ -105,15 +137,28 @@ def main(argv=None) -> dict:
             f"worst-case request ({args.prompt_lens[1]} + {args.gen_lens[1]} tokens) "
             f"does not fit the page pool — raise --pool-pages"
         )
-    wl = WorkloadConfig(
-        n_requests=args.requests,
-        rate=args.rate,
-        prompt_len=args.prompt_lens,
-        gen_len=args.gen_lens,
-        vocab_size=cfg.vocab_size,
-        seed=args.seed,
-    )
-    requests = synthesize(wl, embed_dim=cfg.d_model if cfg.embeds_input else None)
+    embed_dim = cfg.d_model if cfg.embeds_input else None
+    if trace is not None:
+        from repro.traces import to_requests
+
+        requests = to_requests(
+            trace,
+            vocab_size=cfg.vocab_size,
+            seed=args.seed,
+            time_scale=args.trace_time_scale,
+            limit=args.requests or None,
+            embed_dim=embed_dim,
+        )
+    else:
+        wl = WorkloadConfig(
+            n_requests=args.requests,
+            rate=args.rate,
+            prompt_len=args.prompt_lens,
+            gen_len=args.gen_lens,
+            vocab_size=cfg.vocab_size,
+            seed=args.seed,
+        )
+        requests = synthesize(wl, embed_dim=embed_dim)
     summary = serve_loop(
         engine,
         requests,
@@ -121,6 +166,7 @@ def main(argv=None) -> dict:
     )
     result = {
         "arch": cfg.name,
+        "workload": f"trace:{trace.name}" if trace is not None else "synthetic",
         "mode": "static" if args.static else "continuous",
         "attn_impl": args.attn_impl,
         "slots": args.slots,

@@ -17,6 +17,19 @@ heartbeating at step 8), ``add@16:v100`` (a V100 joins), ``replace@24:0=v100``
 (slot 0 swapped for a V100).  A killed run resumes exactly (same data
 position, same fleet, same allocation) with ``--resume`` plus the SAME
 ``--events`` schedule.
+
+Degradation faults (``repro.traces.faults``) layer on with ``--faults``:
+
+  --faults "slow@8:2*3~6,netdeg@20:4~8,outage@30:1+2~5"
+
+(worker 2 computes 3x slower for 6 steps; collectives 4x slower for 8;
+workers 1+2 fail together and rejoin 5 steps later) — or ``--faults
+random:3`` to sample a seeded 3-fault schedule (``--campaign-seed``).
+
+``--trace NAME_OR_PATH`` replays a cluster trace (``repro.traces``)
+instead of hand-written flags: the machines present at t=0 become the
+fleet (``--hetero-gpus``) and mid-trace joins/leaves become the
+``--events`` schedule, mapped onto ``--steps``.
 """
 
 from __future__ import annotations
@@ -64,6 +77,19 @@ def parse_args(argv=None):
         help='membership schedule, e.g. "fail@8:3,add@16:v100,replace@24:0=v100"; '
         "on --resume pass the SAME schedule (applied events are skipped)",
     )
+    ap.add_argument(
+        "--faults",
+        default=None,
+        help='fault schedule, e.g. "slow@8:2*3~6,netdeg@20:4~8,outage@30:1+2~5", '
+        'or "random:<n>" to sample n faults seeded by --campaign-seed',
+    )
+    ap.add_argument(
+        "--trace",
+        default=None,
+        help="bundled trace name (e.g. pai_small) or trace json path; derives the "
+        "fleet and membership schedule (conflicts with --hetero-gpus/--events)",
+    )
+    ap.add_argument("--campaign-seed", type=int, default=0, help="seed for --faults random:<n>")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
@@ -82,6 +108,36 @@ def parse_args(argv=None):
 
         try:
             parse_events(args.events)
+        except ValueError as e:
+            ap.error(str(e))
+    if args.trace:
+        if args.hetero_gpus or args.events:
+            ap.error("--trace derives the fleet and membership schedule; it conflicts "
+                     "with --hetero-gpus/--events — drop one side")
+        import os.path
+
+        from repro.traces import bundled_trace, load_trace, to_events, to_fleet
+
+        try:
+            trace = load_trace(args.trace) if os.path.exists(args.trace) else bundled_trace(args.trace)
+            fleet = to_fleet(trace)
+            args.hetero_gpus = ",".join(fleet)
+            args.n_workers = len(fleet)
+            args.events = to_events(trace, args.steps) or None
+        except (ValueError, FileNotFoundError) as e:
+            ap.error(str(e))
+    if args.faults:
+        from repro.traces.faults import faults_spec, parse_faults, sample_faults
+
+        try:
+            if args.faults.startswith("random:"):
+                n = int(args.faults.split(":", 1)[1])
+                n_workers = len(args.hetero_gpus.split(",")) if args.hetero_gpus else args.n_workers
+                args.faults = faults_spec(
+                    sample_faults(n_workers, args.steps, args.campaign_seed, n_faults=n)
+                )
+            else:
+                parse_faults(args.faults)
         except ValueError as e:
             ap.error(str(e))
     return args
@@ -111,6 +167,7 @@ def main(argv=None) -> dict:
         resume=args.resume,
         seed=args.seed,
         events=args.events,
+        faults=args.faults,
     )
     result = ElasticTrainer(cfg).run()
     print(json.dumps(result, indent=1))

@@ -4,6 +4,7 @@ from repro.runtime.elastic import (
     MembershipEvent,
     RescalePlan,
     parse_events,
+    validate_schedule,
 )
 from repro.runtime.monitor import (
     MeasuredTimingSource,
@@ -20,6 +21,7 @@ __all__ = [
     "MembershipEvent",
     "RescalePlan",
     "parse_events",
+    "validate_schedule",
     "MeasuredTimingSource",
     "SimulatedTimingSource",
     "StragglerMonitor",

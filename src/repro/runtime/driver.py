@@ -24,6 +24,15 @@ object that also closes the paper's headline loop end-to-end:
   worker stops heartbeating and is declared dead after ``patience``
   intervals), so the production detection path is what gets exercised.
 
+* **Fault injection.** ``faults="slow@8:2*3~6,netdeg@20:4~8,outage@30:1+2~5"``
+  (see :func:`~repro.traces.faults.parse_faults`) layers degradation on
+  top of the clean membership schedule: ``slow``/``netdeg`` windows
+  perturb what the timing source REPORTS — the controller and the
+  straggler monitor see injected slowness through the same measurement
+  path as real slowness — and a correlated ``outage`` takes several
+  workers through the failure detector in one rescale, rejoining them as
+  adds (original GPU types) when the window heals.
+
 * **Exact resume.** Checkpoints bundle model + optimizer state with the
   controller state (including its timing-log tail), the data position
   (epoch + aggregation index), and the current membership, so a restart
@@ -70,12 +79,14 @@ from repro.runtime.elastic import (
     FailureDetector,
     MembershipEvent,
     parse_events,
+    validate_schedule,
 )
 from repro.runtime.monitor import (
     MeasuredTimingSource,
     SimulatedTimingSource,
     StragglerMonitor,
 )
+from repro.traces.faults import FaultEvent, FaultInjector, FaultyTimingSource, parse_faults
 
 __all__ = ["DriverConfig", "ElasticTrainer"]
 
@@ -111,6 +122,7 @@ class DriverConfig:
     resume: bool = False
     seed: int = 0
     events: str | None = None  # scripted membership schedule
+    faults: str | None = None  # scripted fault schedule (slow/netdeg/outage + membership)
     heartbeat_patience: int = 3
     log_every: int = 10
     verbose: bool = True
@@ -145,7 +157,13 @@ class ElasticTrainer:
         self.seq_len = cfg.seq if cfg.smoke else self.model_cfg.max_seq
         self.simulated = cfg.hetero_gpus is not None
 
-        self.events: list[MembershipEvent] = parse_events(cfg.events) if cfg.events else []
+        scripted: list = parse_events(cfg.events) if cfg.events else []
+        if cfg.faults:
+            scripted = scripted + parse_faults(cfg.faults)
+        # one validated schedule: a --faults step colliding with an --events
+        # step is exactly as order-dependent as two --events terms colliding
+        self.events: list = validate_schedule(scripted)
+        self._schedule_specs = [e.spec() for e in self.events]  # static schedule (fingerprint)
         self._event_idx = 0
 
         # -- initial membership ------------------------------------------------
@@ -158,9 +176,7 @@ class ElasticTrainer:
                 "make them agree — the GPU list defines the fleet, so a silent mismatch "
                 "would train the wrong worker count"
             )
-        self.ctl = AdaptiveAllocationController(
-            ControllerConfig(total=self.C, n_workers=len(self.gpus), w_min=1)
-        )
+        self.ctl = AdaptiveAllocationController(ControllerConfig(total=self.C, n_workers=len(self.gpus), w_min=1))
         if cfg.policy == "static":
             ratios = [float(x) for x in (cfg.static_ratio or "").split(",")]
             self.alloc = static_allocation(ratios, self.C)
@@ -189,17 +205,16 @@ class ElasticTrainer:
         self.epoch_log: list[dict] = []  # completed epochs (BENCH reads this)
         self.membership_log: list[dict] = []
         self.straggler_flags = 0
+        self.straggler_log: list[dict] = []  # survives monitor rebuilds
         self.fd = FailureDetector(len(self.gpus), patience=cfg.heartbeat_patience)
+        self.injector = FaultInjector(len(self.gpus)) if cfg.faults else None
+        self.fault_log: list[dict] = []
 
         # -- checkpointing / resume -------------------------------------------
-        self.mgr = (
-            CheckpointManager(cfg.ckpt_dir, save_every=cfg.ckpt_every) if cfg.ckpt_dir else None
-        )
+        self.mgr = CheckpointManager(cfg.ckpt_dir, save_every=cfg.ckpt_every) if cfg.ckpt_dir else None
         # state tree shape is membership-independent, so a pre-event "like"
         # tree restores checkpoints written under any later membership
-        like_scfg = HeteroStepConfig(
-            w_max=1, micro_bs=cfg.micro_bs, seq_len=self.seq_len, optimizer="adamw"
-        )
+        like_scfg = HeteroStepConfig(w_max=1, micro_bs=cfg.micro_bs, seq_len=self.seq_len, optimizer="adamw")
         self.state = init_train_state(self.model_cfg, like_scfg, jax.random.PRNGKey(cfg.seed))
         if self.mgr and cfg.resume and self.mgr.latest_step() is not None:
             self._restore()
@@ -252,6 +267,10 @@ class ElasticTrainer:
         # position onward; _finish_epoch must not treat a from-mid-epoch
         # accumulation (post-resume) as a full epoch measurement.
         self._timing_from_agg = self.agg_index
+        if self.injector is not None:
+            # fault windows perturb what the controller MEASURES, whatever
+            # the inner source is — injected stragglers ride the real path
+            self.timing = FaultyTimingSource(self.timing, self.injector, lambda: self.step_i)
         self.straggler = StragglerMonitor(n)
 
     def _reshard_state(self) -> None:
@@ -263,14 +282,12 @@ class ElasticTrainer:
         if self.scfg.fsdp != "gather":
             return
         sspecs = state_specs(self.state, self.mesh, fsdp=True, fsdp_axes=self.scfg.fsdp_axes)
-        self.state = jax.tree.map(
-            lambda x, s: jax.device_put(x, NamedSharding(self.mesh, s)), self.state, sspecs
-        )
+        self.state = jax.tree.map(lambda x, s: jax.device_put(x, NamedSharding(self.mesh, s)), self.state, sspecs)
 
     # -- checkpoint metadata ----------------------------------------------------
 
     def _metadata(self) -> dict:
-        return {
+        meta = {
             "controller": self.ctl.state_dict(),
             "epoch": self.epoch,
             "agg_index": self.agg_index,
@@ -281,6 +298,15 @@ class ElasticTrainer:
             "timing": "simulated" if self.simulated else "measured",
             "data": self._data_fingerprint(),
         }
+        if self.injector is not None:
+            # the LIVE schedule (static + dynamic recovery adds an outage
+            # scheduled) and the open fault windows — the event cursor
+            # indexes into this schedule, not the static one
+            meta["faults"] = {
+                "injector": self.injector.state_dict(),
+                "schedule": [e.spec() for e in self.events],
+            }
+        return meta
 
     def _data_fingerprint(self) -> dict:
         """Everything that defines the run a checkpoint position points into:
@@ -298,7 +324,7 @@ class ElasticTrainer:
             "micro_bs": self.cfg.micro_bs,
             "seq_len": self.seq_len,
             "gpus0": list(self.gpus0),
-            "events": [f"{e.kind}@{e.step}:{e.index}={e.gpu}" for e in self.events],
+            "events": list(self._schedule_specs),
         }
 
     def _restore(self) -> None:
@@ -339,6 +365,12 @@ class ElasticTrainer:
         self.gpus = list(meta.get("gpus", self.gpus))
         self.alloc = np.asarray(meta.get("alloc", self.ctl.allocation), dtype=np.int64)
         self._event_idx = int(meta.get("events_applied", 0))
+        if self.injector is not None and "faults" in meta:
+            # the checkpointed schedule may carry dynamic recovery adds the
+            # static --faults string does not; the cursor indexes into IT
+            self.injector = FaultInjector.from_state_dict(meta["faults"]["injector"])
+            sched = ",".join(meta["faults"]["schedule"])
+            self.events = parse_faults(sched) if sched else []
         if self._event_idx > len(self.events):
             raise ValueError(
                 f"checkpoint had {self._event_idx} events applied but --events "
@@ -373,14 +405,23 @@ class ElasticTrainer:
             return ClusterSpec.from_gpus([gpu]).workers[0].throughput
         return None
 
-    def _apply_event(self, ev: MembershipEvent) -> None:
+    def _apply_event(self, ev: MembershipEvent | FaultEvent) -> None:
+        if ev.kind in ("slow", "netdeg"):
+            # timing faults perturb measurements, not membership: no barrier
+            # checkpoint, no early epoch boundary, no rebuild
+            self.injector.apply(ev)
+            self.fault_log.append({"step": self.step_i, "fault": ev.spec()})
+            self._log(f"[fault] step {self.step_i}: {ev.spec()} active")
+            return
+
         n = len(self.gpus)
+        victims = sorted(getattr(ev, "workers", ()))
         if ev.kind in ("fail", "replace") and not (0 <= ev.index < n):
             raise ValueError(f"event {ev}: worker index out of range for membership size {n}")
-        if ev.kind == "fail" and n == 1:
-            raise ValueError(
-                f"event {ev}: cannot fail the last remaining worker — the fleet would be empty"
-            )
+        if ev.kind == "outage" and (not victims or victims[-1] >= n):
+            raise ValueError(f"event {ev}: outage workers {victims} out of range for membership size {n}")
+        if (ev.kind == "fail" and n == 1) or (ev.kind == "outage" and len(victims) >= n):
+            raise ValueError(f"event {ev}: cannot fail the last remaining worker — the fleet would be empty")
 
         # Barrier checkpoint with PRE-event metadata: a crash during the
         # rebuild window resumes just before the event and re-applies it
@@ -389,17 +430,23 @@ class ElasticTrainer:
             self.mgr.save(self.step_i, self.state, metadata=self._metadata())
 
         coord = ElasticCoordinator(self.ctl)
-        if ev.kind == "fail":
-            # through the detector: the worker stops heartbeating and is
-            # declared dead after `patience` missed intervals
+        if ev.kind in ("fail", "outage"):
+            # through the detector: the silent workers stop heartbeating and
+            # are declared dead after `patience` missed intervals — an outage
+            # is the correlated case, one rescale for the whole group
+            silent = set(victims or [ev.index])
             dead: list[int] = []
             for _ in range(self.fd.patience):
                 for w in range(self.fd.n_workers):
-                    if w != ev.index and self.fd.alive[w]:
+                    if w not in silent and self.fd.alive[w]:
                         self.fd.heartbeat(w)
                 dead = self.fd.tick() or dead
             plan = coord.remove(dead, restore_step=self.step_i)
             new_gpus = [self.gpus[i] for i in plan.survivors]
+            if ev.kind == "outage" and ev.duration is not None:
+                # the outage heals: victims rejoin as adds with their own
+                # GPU types, `duration` steps out
+                self._schedule_recovery([self.gpus[i] for i in sorted(silent)], self.step_i + ev.duration)
         elif ev.kind == "add":
             plan = coord.add(1, est_speed=self._est_speed(ev.gpu))
             new_gpus = self.gpus + [ev.gpu]
@@ -409,6 +456,9 @@ class ElasticTrainer:
             new_gpus[ev.index] = ev.gpu
 
         self.fd.rescale(plan.survivors, plan.n_new)
+        if self.injector is not None:
+            # slow windows are slot-indexed like the detector's miss counts
+            self.injector.rescale(plan.survivors, plan.n_new)
         if ev.kind == "replace":
             self.fd.heartbeat(ev.index)  # fresh card in that slot: clean miss count
         self.gpus = new_gpus
@@ -427,19 +477,19 @@ class ElasticTrainer:
             # as the paper does
             self.epoch += 1
             self.agg_index = 0
+        detail: dict = {"index": ev.index, "gpu": ev.gpu}
+        if victims:
+            detail["workers"] = victims
         self.membership_log.append(
             {
                 "step": self.step_i,
                 "event": f"{ev.kind}@{ev.step}",
-                "detail": {"index": ev.index, "gpu": ev.gpu},
+                "detail": detail,
                 "gpus": list(self.gpus),
                 "allocation": self.alloc.tolist(),
             }
         )
-        self._log(
-            f"[elastic] step {self.step_i}: {ev.kind} -> fleet {self.gpus}, "
-            f"allocation {self.alloc.tolist()}"
-        )
+        self._log(f"[elastic] step {self.step_i}: {ev.kind} -> fleet {self.gpus}, allocation {self.alloc.tolist()}")
         if len(self.gpus) == n and int(np.max(self.alloc)) <= self.w_max:
             # same worker count and the new allocation fits the existing
             # buffers (the common replace case): the compiled step, mesh and
@@ -449,6 +499,24 @@ class ElasticTrainer:
         else:
             self._build()
             self._reshard_state()
+
+    def _schedule_recovery(self, gpus: list[str], at_step: int) -> None:
+        """Insert dynamic ``add`` events for healed outage victims, each on
+        its own free step (the validated schedule owns every step), keeping
+        the applied prefix of ``self.events`` untouched."""
+        used = {e.step for e in self.events}
+        step = max(at_step, self.step_i + 1)
+        for gpu in gpus:
+            while step in used:
+                step += 1
+            used.add(step)
+            ev = FaultEvent(step=step, kind="add", gpu=gpu)
+            self.events.append(ev)
+            self.fault_log.append({"step": self.step_i, "fault": f"recovery scheduled: {ev.spec()}"})
+            self._log(f"[fault] step {self.step_i}: outage heals at step {step} ({gpu} rejoins)")
+        # re-sort the pending tail; applied events all precede step_i < new
+        # steps, so the cursor's prefix is stable and steps stay unique
+        self.events = validate_schedule(self.events)
 
     # -- the loop -----------------------------------------------------------------
 
@@ -482,6 +550,8 @@ class ElasticTrainer:
             "events_applied": self._event_idx,
             "events_pending": len(self.events) - self._event_idx,
             "straggler_flags": self.straggler_flags,
+            "straggler_log": self.straggler_log,
+            "fault_log": self.fault_log,
             "wall_s": round(time.time() - t_wall, 1),
         }
         return result
@@ -530,9 +600,16 @@ class ElasticTrainer:
         if self.timing.ready and complete:
             t_s = self.timing.epoch_times(alloc, self.epoch)
             t_c = _T_C_SIM if self.simulated else 0.0
-            flags = self.straggler.observe(t_s / np.maximum(alloc, 1))
+            # an active netdeg fault scales the collective model (measured
+            # mode folds collectives into the wall clock; nothing to scale)
+            t_c *= getattr(self.timing, "last_collective_scale", 1.0)
+            flags = self.straggler.observe(t_s / np.maximum(alloc, 1), epoch=self.epoch)
             self.straggler_flags += len(flags)
             for f in flags:
+                self.straggler_log.append(
+                    {"epoch": self.epoch, "step_end": self.step_i, "worker": f.worker,
+                     "z": round(f.z_score, 2), "persistent": f.persistent}
+                )
                 self._log(
                     f"[straggler] epoch {self.epoch}: worker {f.worker} "
                     f"z={f.z_score:.1f} persistent={f.persistent}"
@@ -556,6 +633,7 @@ class ElasticTrainer:
                         "agg_s": agg_s,
                         "epoch_s": agg_s * n_agg,
                         "steps": steps_run,
+                        "step_end": self.step_i,  # fault campaigns date epochs in steps
                     }
                 )
             if self.cfg.policy == "adaptive":

@@ -35,6 +35,7 @@ __all__ = [
     "ElasticCoordinator",
     "MembershipEvent",
     "parse_events",
+    "validate_schedule",
 ]
 
 
@@ -139,9 +140,7 @@ class ElasticCoordinator:
         else:
             carry = None
         alloc = self.controller.resize(n_old + n_new, carry_speeds=carry)
-        return RescalePlan(
-            survivors=list(range(n_old)), n_new=n_new, allocation=alloc, restore_step=None
-        )
+        return RescalePlan(survivors=list(range(n_old)), n_new=n_new, allocation=alloc, restore_step=None)
 
     def replace(self, index: int, est_speed: float | None = None) -> RescalePlan:
         """Replace worker ``index`` (paper fig. 11 'weak -> strong' case)."""
@@ -190,6 +189,40 @@ class MembershipEvent:
         if self.kind in ("add", "replace") and not self.gpu:
             raise ValueError(f"{self.kind} event needs a GPU type")
 
+    def spec(self) -> str:
+        """Canonical grammar term — ``parse_events(ev.spec())`` roundtrips."""
+        if self.kind == "fail":
+            return f"fail@{self.step}:{self.index}"
+        if self.kind == "add":
+            return f"add@{self.step}:{self.gpu}"
+        return f"replace@{self.step}:{self.index}={self.gpu}"
+
+
+def validate_schedule(events: Sequence) -> list:
+    """Sort a schedule by step and reject same-step collisions.
+
+    Two events at the same step apply back-to-back, and the second sees the
+    membership AFTER the first renumbered workers — ``fail@8:1,fail@8:1``
+    kills two DIFFERENT physical workers, and which two depends on the
+    written order.  ``parse_events`` previously accepted that silently
+    (stable sort kept written order); now any two events sharing a step —
+    including exact duplicates — raise with both offending terms named, so
+    an argparse shim can surface the message as-is.  Works on anything with
+    ``.step`` and ``.spec()`` (membership events and trace fault events).
+    """
+    ordered = sorted(events, key=lambda e: e.step)
+    by_step: dict[int, object] = {}
+    for e in ordered:
+        prior = by_step.get(e.step)
+        if prior is not None:
+            raise ValueError(
+                f"events {prior.spec()!r} and {e.spec()!r} both fire at step {e.step}: "
+                "same-step events apply in written order against a renumbered "
+                "membership (silently order-dependent) — give each event its own step"
+            )
+        by_step[e.step] = e
+    return ordered
+
 
 _EVENT_RE = re.compile(r"^(?P<kind>add|fail|replace)@(?P<step>\d+):(?P<spec>.+)$")
 
@@ -199,9 +232,10 @@ def parse_events(schedule: str) -> list[MembershipEvent]:
 
     Comma-separated ``kind@step:spec`` terms where spec is a GPU type
     (``add``), a worker index (``fail``) or ``index=gpu`` (``replace``).
-    Returned sorted by step (stable, so same-step events keep written
-    order).  GPU names are validated against the known throughput table so a
-    typo fails at parse time, not 24 steps into the run.
+    Returned sorted by step; duplicate or same-step terms are rejected (see
+    :func:`validate_schedule`).  GPU names are validated against the known
+    throughput table so a typo fails at parse time, not 24 steps into the
+    run.
     """
     events: list[MembershipEvent] = []
     for term in schedule.split(","):
@@ -210,9 +244,7 @@ def parse_events(schedule: str) -> list[MembershipEvent]:
             continue
         m = _EVENT_RE.match(term)
         if not m:
-            raise ValueError(
-                f"bad event {term!r}: expected kind@step:spec with kind in add/fail/replace"
-            )
+            raise ValueError(f"bad event {term!r}: expected kind@step:spec with kind in add/fail/replace")
         kind, step, spec = m.group("kind"), int(m.group("step")), m.group("spec")
         if kind == "add":
             events.append(MembershipEvent(step=step, kind="add", gpu=normalize_gpu(spec)))
@@ -224,7 +256,5 @@ def parse_events(schedule: str) -> list[MembershipEvent]:
             idx, sep, gpu = spec.partition("=")
             if not sep or not idx.isdigit():
                 raise ValueError(f"bad event {term!r}: replace takes index=gpu")
-            events.append(
-                MembershipEvent(step=step, kind="replace", index=int(idx), gpu=normalize_gpu(gpu))
-            )
-    return sorted(events, key=lambda e: e.step)
+            events.append(MembershipEvent(step=step, kind="replace", index=int(idx), gpu=normalize_gpu(gpu)))
+    return validate_schedule(events)

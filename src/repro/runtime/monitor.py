@@ -170,9 +170,16 @@ class StragglerMonitor:
         self.z_threshold = z_threshold
         self._hist: deque[np.ndarray] = deque(maxlen=window)  # raw observations
         self._base: list[deque[float]] = [deque(maxlen=window) for _ in range(n_workers)]
+        self.flag_log: list[dict] = []  # every flag ever raised, with the epoch tag
 
-    def observe(self, per_sample_time: Sequence[float]) -> list[StragglerFlag]:
-        """Feed normalized (per-microbatch) compute times; returns flags."""
+    def observe(self, per_sample_time: Sequence[float], epoch: int | None = None) -> list[StragglerFlag]:
+        """Feed normalized (per-microbatch) compute times; returns flags.
+
+        ``epoch`` (optional) tags the entries appended to :attr:`flag_log`,
+        the monitor's full flag history — the fault-injection campaigns score
+        straggler onset/recovery from it, where the return value only carries
+        the CURRENT observation's flags.
+        """
         t = np.asarray(per_sample_time, dtype=np.float64)
         self._hist.append(t)
         if len(self._hist) < 4:  # warmup: seed each worker's baseline
@@ -194,6 +201,10 @@ class StragglerMonitor:
                 flags.append(StragglerFlag(worker=i, z_score=float(z), persistent=persistent))
             else:
                 self._base[i].append(float(t[i]))
+        for f in flags:
+            self.flag_log.append(
+                {"epoch": epoch, "worker": f.worker, "z": round(f.z_score, 2), "persistent": f.persistent}
+            )
         return flags
 
     def imbalance(self) -> float:

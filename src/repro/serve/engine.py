@@ -151,9 +151,7 @@ class ServeEngine:
                     lambda g, s: g.at[:, b].set(s[:, 0].astype(g.dtype)), big["body"], small["body"]
                 )
             if "tail" in big:
-                out["tail"] = jax.tree.map(
-                    lambda g, s: g.at[b].set(s[0].astype(g.dtype)), big["tail"], small["tail"]
-                )
+                out["tail"] = jax.tree.map(lambda g, s: g.at[b].set(s[0].astype(g.dtype)), big["tail"], small["tail"])
             return out, last_tok.at[b].set(tok)
 
         def splice_paged_layer(big_layer, small_layer, b, dest, offs, stacked):
@@ -305,12 +303,15 @@ class ServeEngine:
             ps = self.layout.page_size
             pidx = np.arange(W)
             row = self.pool.table[b]
-            dest = np.where(
-                pidx < L, row[np.minimum(pidx // ps, row.shape[0] - 1)], self.layout.n_pages
-            )
+            dest = np.where(pidx < L, row[np.minimum(pidx // ps, row.shape[0] - 1)], self.layout.n_pages)
             self.cache, self.last_tok = self._insert_paged(
-                self.cache, small, self.last_tok, b, tok[0],
-                jnp.asarray(dest.astype(np.int32)), jnp.asarray((pidx % ps).astype(np.int32)),
+                self.cache,
+                small,
+                self.last_tok,
+                b,
+                tok[0],
+                jnp.asarray(dest.astype(np.int32)),
+                jnp.asarray((pidx % ps).astype(np.int32)),
             )
             self._ship_table()
         else:
@@ -376,9 +377,7 @@ class ServeEngine:
             "prefill_tokens": self.prefill_tokens,
             "tokens_out": self.tokens_out,
             "attended_key_tokens": self.attended_key_tokens,
-            "slot_utilization": (
-                self.active_slot_ticks / (self.ticks * self.n_slots) if self.ticks else 0.0
-            ),
+            "slot_utilization": self.active_slot_ticks / (self.ticks * self.n_slots) if self.ticks else 0.0,
         }
         if self.pool is not None:
             m["pool"] = self.pool.metrics()

@@ -58,15 +58,35 @@ def synthesize(cfg: WorkloadConfig, embed_dim: int | None = None) -> list[Reques
     return reqs
 
 
-def from_trace(records: list[dict], vocab_size: int = 256, seed: int = 0) -> list[Request]:
+def from_trace(
+    records: list[dict],
+    vocab_size: int = 256,
+    seed: int = 0,
+    embed_dim: int | None = None,
+    time_scale: float = 1.0,
+) -> list[Request]:
     """Build requests from a trace: [{"arrival": t, "prompt_len": L,
-    "gen_len": G}, ...].  Token contents are synthesized deterministically."""
+    "gen_len": G}, ...].  Token contents are synthesized deterministically
+    (``embed_dim`` switches to (L, d) float32 embedding prompts, mirroring
+    :func:`synthesize`); ``time_scale`` maps trace time onto engine ticks.
+    Arrivals must be non-decreasing — the scheduler admits in arrival order,
+    so a shuffled trace would silently serve a different workload."""
+    if time_scale <= 0:
+        raise ValueError("time_scale must be positive")
     rng = np.random.default_rng(seed)
     reqs = []
+    prev = float("-inf")
     for i, rec in enumerate(records):
         L, G = int(rec["prompt_len"]), int(rec["gen_len"])
         if L < 1 or G < 1:
             raise ValueError(f"trace record {i}: prompt_len/gen_len must be >= 1")
-        prompt = rng.integers(0, vocab_size, L).astype(np.int32)
-        reqs.append(Request(rid=i, prompt=prompt, max_gen=G, arrival=float(rec.get("arrival", 0.0))))
+        arrival = float(rec.get("arrival", 0.0)) * time_scale
+        if arrival < prev:
+            raise ValueError(f"trace record {i}: arrivals must be non-decreasing")
+        prev = arrival
+        if embed_dim is not None:
+            prompt = rng.standard_normal((L, embed_dim)).astype(np.float32)
+        else:
+            prompt = rng.integers(0, vocab_size, L).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_gen=G, arrival=arrival))
     return reqs

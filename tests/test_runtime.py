@@ -106,6 +106,30 @@ def test_parse_events_rejects_bad_terms(bad):
         parse_events(bad)
 
 
+def test_parse_events_rejects_same_step_collisions():
+    """Regression: two events at one step apply back-to-back and the second
+    sees the membership AFTER the first renumbered workers — the written
+    order silently picked which physical workers were hit.  Both duplicates
+    and distinct same-step terms must be rejected, naming both terms so an
+    argparse shim can surface the message as-is."""
+    with pytest.raises(ValueError, match=r"'fail@8:1' and 'fail@8:1' both fire at step 8"):
+        parse_events("fail@8:1,fail@8:1")
+    with pytest.raises(ValueError, match=r"'fail@8:1' and 'add@8:v100' both fire at step 8"):
+        parse_events("fail@8:1,add@8:v100")
+    # written order must not matter for WHETHER it is rejected
+    with pytest.raises(ValueError, match="both fire at step 8"):
+        parse_events("add@8:v100,fail@8:1")
+
+
+def test_validate_schedule_sorts_and_passes_distinct_steps():
+    from repro.runtime.elastic import validate_schedule
+
+    evs = [MembershipEvent(step=9, kind="fail", index=0), MembershipEvent(step=3, kind="add", gpu="v100")]
+    assert [e.step for e in validate_schedule(evs)] == [3, 9]
+    # spec() roundtrips through the parser (what fingerprints persist)
+    assert parse_events(",".join(e.spec() for e in evs)) == sorted(evs, key=lambda e: e.step)
+
+
 def test_straggler_monitor_flags_persistent():
     mon = StragglerMonitor(4, window=8, z_threshold=2.0)
     flags = []

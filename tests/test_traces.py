@@ -1,0 +1,339 @@
+"""Traces: schema/adapters, fault grammar, injector, campaign determinism."""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.runtime.elastic import parse_events
+from repro.serve.workload import from_trace
+from repro.traces import (
+    FaultInjector,
+    FaultyTimingSource,
+    Trace,
+    TraceMachine,
+    TraceTask,
+    bundled_trace,
+    faults_spec,
+    load_trace,
+    parse_faults,
+    sample_faults,
+    save_trace,
+    to_events,
+    to_fleet,
+    to_requests,
+)
+from repro.traces.synth import TraceSynthConfig, synthesize_trace
+
+# ---------------------------------------------------------------------------
+# schema + synthesis
+# ---------------------------------------------------------------------------
+
+
+def test_trace_roundtrips_through_dict_and_disk(tmp_path):
+    tr = synthesize_trace(TraceSynthConfig(max_tasks=12))
+    assert Trace.from_dict(tr.to_dict()) == tr
+    path = str(tmp_path / "t.json")
+    save_trace(tr, path)
+    assert load_trace(path) == tr
+
+
+def test_trace_validation():
+    m = TraceMachine(machine="m0", gpu="v100")
+    with pytest.raises(ValueError, match="at t=0"):
+        Trace(name="x", horizon=10, machines=(TraceMachine(machine="m0", gpu="v100", join=5.0),), tasks=())
+    with pytest.raises(ValueError, match="duplicate machine"):
+        Trace(name="x", horizon=10, machines=(m, m), tasks=())
+    with pytest.raises(ValueError, match="past the horizon"):
+        Trace(
+            name="x", horizon=10, machines=(m,),
+            tasks=(TraceTask(job="j", task="t", arrival=11.0, prompt_len=4, gen_len=4),),
+        )
+    with pytest.raises(ValueError, match="unknown GPU"):
+        TraceMachine(machine="m0", gpu="gtx9999")
+    with pytest.raises(ValueError, match="leave must be after join"):
+        TraceMachine(machine="m0", gpu="v100", join=5.0, leave=5.0)
+
+
+def test_bundled_trace_matches_its_generator():
+    """The checked-in artifact must be exactly what the documented
+    regeneration command produces — provenance is the point of deriving it."""
+    assert bundled_trace().to_dict() == synthesize_trace(TraceSynthConfig()).to_dict()
+
+
+def test_synth_is_seeded_and_diurnal_config_validated():
+    a, b = synthesize_trace(TraceSynthConfig(seed=3)), synthesize_trace(TraceSynthConfig(seed=3))
+    assert a == b
+    assert a != synthesize_trace(TraceSynthConfig(seed=4))
+    with pytest.raises(ValueError, match="diurnal_amplitude"):
+        TraceSynthConfig(diurnal_amplitude=1.5)
+
+
+# ---------------------------------------------------------------------------
+# adapters
+# ---------------------------------------------------------------------------
+
+
+def test_to_fleet_and_events_replay_machine_churn():
+    tr = bundled_trace()
+    fleet = to_fleet(tr)
+    assert fleet == [m.gpu for m in tr.machines if m.join <= 0]
+    sched = to_events(tr, 40)
+    events = parse_events(sched)  # valid grammar, no same-step collisions
+    kinds = [e.kind for e in events]
+    assert "add" in kinds and "fail" in kinds  # v100 joins, gtx1080ti leaves
+    # the failing index names the leaving machine's CURRENT slot: m3 sits at
+    # index 3 of [m0..m3] + [m4 appended] -> still 3 when it leaves at t=64
+    fail = next(e for e in events if e.kind == "fail")
+    assert fail.index == 3
+
+
+def test_to_events_bumps_same_step_collisions():
+    machines = (
+        TraceMachine(machine="a", gpu="v100"),
+        TraceMachine(machine="b", gpu="v100", join=5.0),
+        TraceMachine(machine="c", gpu="v100", join=5.0),  # rounds to the same step
+    )
+    sched = to_events(Trace(name="x", horizon=10.0, machines=machines, tasks=()), 10)
+    steps = [e.step for e in parse_events(sched)]
+    assert len(set(steps)) == len(steps) == 2
+
+
+def test_to_events_refuses_to_empty_the_cluster():
+    machines = (TraceMachine(machine="a", gpu="v100", leave=5.0),)
+    with pytest.raises(ValueError, match="empty the cluster"):
+        to_events(Trace(name="x", horizon=10.0, machines=machines, tasks=()), 10)
+
+
+def test_to_requests_and_from_trace():
+    tr = bundled_trace()
+    reqs = to_requests(tr, limit=6, time_scale=2.0, seed=1)
+    assert len(reqs) == 6
+    for r, t in zip(reqs, tr.tasks[:6]):
+        assert r.max_gen == t.gen_len
+        assert len(r.prompt) == t.prompt_len
+        assert r.arrival == pytest.approx(t.arrival * 2.0)
+    # payloads are seed-deterministic, shapes trace-determined
+    again = to_requests(tr, limit=6, time_scale=2.0, seed=1)
+    assert all(np.array_equal(a.prompt, b.prompt) for a, b in zip(reqs, again))
+    emb = to_requests(tr, limit=2, embed_dim=8)
+    assert emb[0].prompt.shape == (tr.tasks[0].prompt_len, 8)
+    assert emb[0].prompt.dtype == np.float32
+
+
+def test_from_trace_validates_records():
+    with pytest.raises(ValueError, match="prompt_len/gen_len"):
+        from_trace([{"arrival": 0.0, "prompt_len": 0, "gen_len": 4}])
+    with pytest.raises(ValueError, match="non-decreasing"):
+        from_trace(
+            [
+                {"arrival": 5.0, "prompt_len": 4, "gen_len": 4},
+                {"arrival": 1.0, "prompt_len": 4, "gen_len": 4},
+            ]
+        )
+    with pytest.raises(ValueError, match="time_scale"):
+        from_trace([{"arrival": 0.0, "prompt_len": 4, "gen_len": 4}], time_scale=0.0)
+
+
+# ---------------------------------------------------------------------------
+# fault grammar
+# ---------------------------------------------------------------------------
+
+
+def test_parse_faults_superset_grammar_roundtrips():
+    sched = "slow@8:2*3~6,fail@12:0,add@16:v100,netdeg@20:4~8,replace@24:1=v100,outage@30:1+2~5"
+    events = parse_faults(sched)
+    assert [e.kind for e in events] == ["slow", "fail", "add", "netdeg", "replace", "outage"]
+    assert faults_spec(events) == sched  # canonical form roundtrips
+    assert parse_faults(faults_spec(events)) == events
+    slow = events[0]
+    assert (slow.index, slow.factor, slow.duration) == (2, 3.0, 6)
+    outage = events[-1]
+    assert (outage.workers, outage.duration) == ((1, 2), 5)
+    # permanent variants: no ~duration
+    assert parse_faults("slow@8:2*3")[0].duration is None
+    assert parse_faults("outage@8:0+2")[0].duration is None
+
+
+@pytest.mark.parametrize(
+    "bad, msg",
+    [
+        ("slow@8:2*0.5", "factor"),  # a "slowdown" below 1 would be a speedup
+        ("slow@8:2*3~0", "duration"),
+        ("netdeg@8:abc", "netdeg takes"),
+        ("outage@5:1+1", "distinct"),
+        ("outage@5:", "expected kind@step:spec"),
+        ("wat@3:x", "expected kind@step:spec"),
+        ("add@3:gtx9999", "unknown GPU"),
+        ("slow@8:2*3,netdeg@8:2", "both fire at step 8"),  # cross-kind collision
+    ],
+)
+def test_parse_faults_rejects_bad_schedules(bad, msg):
+    with pytest.raises(ValueError, match=msg):
+        parse_faults(bad)
+
+
+def test_sample_faults_seeded_and_bounded():
+    a = sample_faults(4, 36, seed=5)
+    assert a == sample_faults(4, 36, seed=5)
+    assert faults_spec(a) != faults_spec(sample_faults(4, 36, seed=6))
+    # schedules keep the worst-case membership >= 2 whatever order applies
+    for seed in range(12):
+        events = sample_faults(4, 36, seed=seed)
+        n = 4
+        for e in events:
+            if e.kind == "fail":
+                n -= 1
+            elif e.kind == "outage":
+                n -= len(e.workers)
+            elif e.kind == "add":
+                n += 1
+            assert n >= 2, faults_spec(events)
+
+
+# ---------------------------------------------------------------------------
+# injector + timing wrapper
+# ---------------------------------------------------------------------------
+
+
+def test_injector_windows_open_close_and_rescale():
+    inj = FaultInjector(4)
+    inj.apply(parse_faults("slow@8:2*3~6")[0])
+    inj.apply(parse_faults("netdeg@10:4~5")[0])
+    assert inj.compute_scale(7).tolist() == [1, 1, 1, 1]  # not yet active
+    assert inj.compute_scale(10).tolist() == [1, 1, 3, 1]
+    assert inj.compute_scale(14).tolist() == [1, 1, 1, 1]  # window closed
+    assert inj.collective_scale(9) == 1.0
+    assert inj.collective_scale(12) == 4.0
+    # rescale: worker 2 dies -> its slow window dies with it; survivors remap
+    inj2 = FaultInjector.from_state_dict(inj.state_dict())
+    inj2.rescale(survivors=[0, 1, 3], n_new=1)
+    assert inj2.n_workers == 4
+    assert inj2.compute_scale(10).tolist() == [1, 1, 1, 1]
+    # ... while a window on a SURVIVING worker follows its new slot
+    inj.rescale(survivors=[2, 0], n_new=0)
+    assert inj.compute_scale(10).tolist() == [3, 1]
+
+
+def test_injector_rejects_bad_applies():
+    inj = FaultInjector(2)
+    with pytest.raises(ValueError, match="out of range"):
+        inj.apply(parse_faults("slow@8:5*2")[0])
+    with pytest.raises(ValueError, match="membership fault"):
+        inj.apply(parse_faults("fail@8:0")[0])
+
+
+class _FlatSource:
+    """Inner TimingSource stub: constant unit times, counts resets."""
+
+    def __init__(self, n):
+        self.n = n
+        self.resets = 0
+
+    def record_step(self, wall_s, alloc):
+        pass
+
+    def epoch_times(self, alloc, epoch):
+        return np.ones(self.n)
+
+    def reset(self):
+        self.resets += 1
+
+    @property
+    def ready(self):
+        return True
+
+
+def test_faulty_timing_source_scales_what_the_controller_sees():
+    inj = FaultInjector(4)
+    inj.apply(parse_faults("slow@10:1*2~4")[0])
+    inj.apply(parse_faults("netdeg@12:5~2")[0])
+    step = {"i": 0}
+    src = FaultyTimingSource(_FlatSource(4), inj, lambda: step["i"])
+    for s in (10, 11, 12, 13):  # slow live all 4 steps, netdeg live for 2
+        step["i"] = s
+        src.record_step(0.1, [1, 1, 1, 1])
+    t = src.epoch_times([1, 1, 1, 1], epoch=0)
+    assert t.tolist() == [1.0, 2.0, 1.0, 1.0]
+    assert src.last_collective_scale == pytest.approx((1 + 1 + 5 + 5) / 4)
+    # the drain clears the noted steps; an all-clear epoch reads unscaled
+    for s in (20, 21):
+        step["i"] = s
+        src.record_step(0.1, [1, 1, 1, 1])
+    assert src.epoch_times([1, 1, 1, 1], epoch=1).tolist() == [1.0, 1.0, 1.0, 1.0]
+    assert src.last_collective_scale == 1.0
+    assert src.ready
+    src.reset()
+    assert src.inner.resets == 1
+
+
+# ---------------------------------------------------------------------------
+# campaign (driver-backed: slow lane)
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_templates_differ_across_seeds_without_running():
+    from repro.traces.campaign import SCENARIOS, scenario_faults
+
+    for sc in SCENARIOS:
+        assert scenario_faults(sc, 0, 4, 36) == scenario_faults(sc, 0, 4, 36)
+        parse_faults(scenario_faults(sc, 0, 4, 36))  # valid grammar
+    assert scenario_faults("straggler", 0, 4, 36) != scenario_faults("straggler", 3, 4, 36)
+    assert scenario_faults("random", 0, 4, 36) != scenario_faults("random", 1, 4, 36)
+
+
+@pytest.mark.slow
+def test_straggler_trial_recovers_and_is_bit_deterministic():
+    """Same seed -> byte-identical BENCH payload (what CI's determinism gate
+    relies on); the injected straggler must be flagged by the monitor, and
+    the allocation must re-converge once the window clears."""
+    from repro.traces.campaign import CampaignConfig, run_trial
+
+    cfg = CampaignConfig()
+    a = run_trial(cfg, "straggler", 0)
+    b = run_trial(cfg, "straggler", 0)
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+    assert a["straggler_flags"] >= 1
+    assert a["recovered"] is True
+    assert a["recovery_ticks"] is not None
+    assert a["reconverged"] is True
+    assert 0.0 < a["goodput_frac"] <= 1.05
+
+
+@pytest.mark.slow
+def test_outage_takes_workers_out_together_and_heals():
+    """A correlated outage is ONE rescale (not per-worker dribble), and a
+    timed outage rejoins its victims with their original GPU types."""
+    from repro.traces.campaign import CampaignConfig, run_trial, scenario_faults
+
+    cfg = CampaignConfig()
+    fleet = cfg.fleet.split(",")
+    spec = parse_faults(scenario_faults("outage", 0, len(fleet), cfg.steps))[0]
+    t = run_trial(cfg, "outage", 0)
+    # one removal + one rejoin add per victim
+    assert t["memberships"] == 1 + len(spec.workers)
+    assert sorted(t["final_gpus"]) == sorted(fleet)
+    assert t["recovered"] is True
+
+
+@pytest.mark.slow
+def test_faulted_run_checkpoints_and_resumes(tmp_path):
+    """The fault schedule (including dynamic recovery adds) and the open
+    injector windows ride the checkpoint: a resume under the same flags
+    continues instead of refusing or replaying faults."""
+    from repro.runtime.driver import DriverConfig, ElasticTrainer
+
+    common = dict(
+        arch="smollm-360m", smoke=True, seq=16, n_workers=2, micro_bs=1,
+        total_micro=4, steps_per_epoch=2, hetero_gpus="v100,gtx1080ti",
+        faults="slow@3:1*3,outage@6:0~4", ckpt_dir=str(tmp_path / "ck"),
+        ckpt_every=4, verbose=False, seed=0,
+    )
+    first = ElasticTrainer(DriverConfig(steps=10, **common)).run()
+    assert first["fault_log"]  # slow applied + recovery scheduled
+    res = ElasticTrainer(DriverConfig(steps=16, resume=True, **common)).run()
+    assert res["steps"] == 16
+    assert res["events_pending"] == 0
+    # the healed outage brought the v100 back: fleet ends at full strength
+    assert sorted(res["gpus"]) == ["gtx1080ti", "v100"]
