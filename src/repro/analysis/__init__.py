@@ -1,0 +1,33 @@
+"""Static analysis over traced programs — the merge gate for new step families.
+
+``python -m repro.analysis [--target train|serve|kernels|specs|all]`` proves:
+
+* collective uniformity — no rank-divergent collective sequences inside
+  ``shard_map`` manual regions (the while-mode FSDP deadlock class);
+* Pallas kernel safety — block origins in bounds over the whole grid,
+  sentinel clamps intentional, VMEM within budget;
+* sharding sanity — every config x declared mesh: divisible specs, no
+  silently-replicated large tensors.
+
+See ``cli.py`` for the entry point, ``findings.py`` for the report format.
+"""
+
+from repro.analysis.collectives import check_collective_uniformity
+from repro.analysis.costmodel import estimate_cost
+from repro.analysis.findings import Finding, apply_pragmas, build_report
+from repro.analysis.kernels import SentinelCheck, audit_pallas_eqn, audit_traced
+from repro.analysis.specs_audit import DECLARED_MESHES, StandinMesh, audit_all_specs
+
+__all__ = [
+    "Finding",
+    "apply_pragmas",
+    "build_report",
+    "check_collective_uniformity",
+    "estimate_cost",
+    "SentinelCheck",
+    "audit_pallas_eqn",
+    "audit_traced",
+    "StandinMesh",
+    "DECLARED_MESHES",
+    "audit_all_specs",
+]

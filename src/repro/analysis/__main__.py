@@ -1,0 +1,13 @@
+import os
+import sys
+
+# Ring collectives short-circuit at axis size 1, so the train/selftest traces
+# need a real multi-device mesh to expose their ppermutes.  Must run before
+# any jax import (jax locks the device count at first backend init); tests
+# import repro.analysis.cli directly and keep seeing 1 device.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+from repro.analysis.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

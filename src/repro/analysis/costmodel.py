@@ -1,0 +1,114 @@
+"""Jaxpr-level FLOP / HBM-byte estimator for the dryrun cross-check.
+
+Conventions are chosen to be comparable with XLA's ``compiled.cost_analysis()``
+(the numbers ``launch/dryrun.py`` records):
+
+* loop bodies (``while``/``scan``) are counted ONCE — cost_analysis and a
+  flat HLO scan both do (see the ``loop_aware_collective_bytes`` docstring in
+  dryrun); the analyzer mirrors that so a loop does not inflate disagreement.
+* FLOPs: ``dot_general`` contributes ``2 * out.size * K`` (K = product of
+  contracted dims); every other array-producing leaf primitive contributes
+  ``out.size`` (one elementwise op per element).
+* Bytes: each leaf eqn contributes its operand + result aval bytes.  This is
+  an *un-fused upper bound* — XLA fuses elementwise chains into one HBM
+  round-trip, so the estimate runs high on pointwise-heavy programs; the
+  dryrun cross-check therefore warns only outside a 2x band.
+* ``pallas_call`` is a leaf: its operand/result bytes count once (block
+  re-fetches and VMEM traffic are the kernel auditor's department).
+* work is bucketed by partitioning regime: inside a ``shard_map`` manual
+  region the traced shapes are already PER-DEVICE (every device runs the
+  body once), while outside, GSPMD divides the global shapes across the
+  mesh.  Per-device totals are therefore ``manual + auto / n_devices`` —
+  dividing the whole trace by device count undercounts shard_map-heavy
+  programs by exactly the mesh size.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.analysis.jaxpr_walk import inner_jaxpr, subjaxprs
+
+__all__ = ["estimate_cost", "per_device"]
+
+# primitives that move/alias data at zero arithmetic cost
+_FREE_PRIMS = {
+    "broadcast_in_dim",
+    "reshape",
+    "squeeze",
+    "transpose",
+    "convert_element_type",
+    "copy",
+    "device_put",
+    "stop_gradient",
+    "slice",
+}
+
+
+def _aval_bytes(v) -> int:
+    aval = getattr(v, "aval", None)
+    shape = getattr(aval, "shape", None)
+    dtype = getattr(aval, "dtype", None)
+    if shape is None or dtype is None:
+        return 0
+    return int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
+
+
+def _dot_flops(eqn) -> int:
+    (contract, _batch) = eqn.params["dimension_numbers"]
+    lhs = eqn.invars[0].aval
+    k = 1
+    for d in contract[0]:
+        k *= int(lhs.shape[d])
+    out = eqn.outvars[0].aval
+    return 2 * int(np.prod(out.shape, dtype=np.int64)) * k
+
+
+def _walk(jaxpr, manual: bool, acc: dict) -> None:
+    key = "manual" if manual else "auto"
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        subs = list(subjaxprs(eqn)) if prim != "pallas_call" else []
+        if subs:
+            for _, sub in subs:  # bodies once, matching cost_analysis
+                _walk(sub, manual or prim == "shard_map", acc)
+            continue
+        eqn_bytes = sum(_aval_bytes(v) for v in eqn.invars) + sum(
+            _aval_bytes(v) for v in eqn.outvars
+        )
+        if prim == "dot_general":
+            acc[f"flops_{key}"] += _dot_flops(eqn)
+            acc[f"bytes_{key}"] += eqn_bytes
+        elif prim in _FREE_PRIMS:
+            pass
+        else:
+            out_elems = sum(
+                int(np.prod(getattr(v.aval, "shape", ()), dtype=np.int64)) for v in eqn.outvars
+            )
+            acc[f"flops_{key}"] += out_elems
+            acc[f"bytes_{key}"] += eqn_bytes
+
+
+def estimate_cost(closed_jaxpr) -> dict:
+    """Cost estimate for a traced program, bucketed by partitioning regime.
+
+    ``flops``/``bytes`` are the totals; the ``_manual`` bucket (inside
+    ``shard_map``) is already per-device, the ``_auto`` bucket is global and
+    gets divided by the mesh size via :func:`per_device`.
+    """
+    j = inner_jaxpr(closed_jaxpr)
+    acc = {"flops_manual": 0, "flops_auto": 0, "bytes_manual": 0, "bytes_auto": 0}
+    _walk(j, False, acc)
+    acc = {k: int(v) for k, v in acc.items()}
+    acc["flops"] = acc["flops_manual"] + acc["flops_auto"]
+    acc["bytes"] = acc["bytes_manual"] + acc["bytes_auto"]
+    return acc
+
+
+def per_device(est: dict, n_devices: int) -> dict:
+    """Per-device ``{"flops", "bytes"}`` under the bucketing convention."""
+    n = max(int(n_devices), 1)
+    return {
+        "flops": est["flops_manual"] + est["flops_auto"] / n,
+        "bytes": est["bytes_manual"] + est["bytes_auto"] / n,
+    }

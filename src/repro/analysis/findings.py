@@ -1,0 +1,123 @@
+"""Finding model + deterministic report assembly for ``repro.analysis``.
+
+A finding is one (rule, severity, location) fact the analyzers proved about
+a traced program or a spec table.  Reports must be *byte-deterministic*:
+no timestamps, no ids, findings fully sorted, ``json.dump(sort_keys=True)``
+— CI runs the CLI twice and byte-compares the artifacts (the PR 6
+scenarios-lane pattern).
+
+Suppression: a finding anchored to a source line (``src = "file.py:123"``)
+is suppressed when that line carries an inline pragma
+
+    some_collective(...)  # analysis: ignore[divergent-collective]
+
+Suppressed findings stay in the report (``suppressed: true``) but do not
+count toward the error total that drives the CLI exit code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import linecache
+import os
+import re
+from typing import Any, Iterable
+
+__all__ = ["Finding", "apply_pragmas", "build_report", "severity_counts"]
+
+SEVERITIES = ("error", "warning", "note")
+_SEV_RANK = {s: i for i, s in enumerate(SEVERITIES)}
+_PRAGMA_RE = re.compile(r"#\s*analysis:\s*ignore\[([\w\-, ]+)\]")
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str  # kebab-case rule id, e.g. "divergent-collective"
+    severity: str  # "error" | "warning" | "note"
+    target: str  # analyzed unit, e.g. "train:while-fsdp=gather-psum"
+    path: str  # eqn path / tree path inside the target
+    message: str
+    src: str = ""  # "file.py:123" of the offending eqn, when known
+    suppressed: bool = False
+
+    def __post_init__(self) -> None:
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"bad severity {self.severity!r}")
+
+    def sort_key(self) -> tuple:
+        return (_SEV_RANK[self.severity], self.rule, self.target, self.path, self.message)
+
+    def to_dict(self) -> dict:
+        return {
+            "rule": self.rule,
+            "severity": self.severity,
+            "target": self.target,
+            "path": self.path,
+            "message": self.message,
+            "src": self.src,
+            "suppressed": self.suppressed,
+        }
+
+
+def _relpath(path: str) -> str:
+    try:
+        rel = os.path.relpath(path)
+    except ValueError:  # different drive (windows)
+        return path
+    return path if rel.startswith("..") else rel
+
+
+def src_of(file_name: str | None, line: int | None) -> str:
+    if not file_name or not line:
+        return ""
+    return f"{_relpath(file_name)}:{line}"
+
+
+def apply_pragmas(findings: Iterable[Finding]) -> list[Finding]:
+    """Mark findings whose source line carries ``# analysis: ignore[rule]``."""
+    out = []
+    for f in findings:
+        if f.src:
+            fname, _, lineno = f.src.rpartition(":")
+            line = linecache.getline(fname, int(lineno)) if lineno.isdigit() else ""
+            m = _PRAGMA_RE.search(line)
+            if m and f.rule in {r.strip() for r in m.group(1).split(",")}:
+                f = dataclasses.replace(f, suppressed=True)
+        out.append(f)
+    return out
+
+
+def severity_counts(findings: Iterable[Finding]) -> dict:
+    counts = {"n_error": 0, "n_warning": 0, "n_note": 0, "n_suppressed": 0}
+    by_rule: dict[str, int] = {}
+    for f in findings:
+        if f.suppressed:
+            counts["n_suppressed"] += 1
+        else:
+            counts[f"n_{f.severity}"] += 1
+        by_rule[f.rule] = by_rule.get(f.rule, 0) + 1
+    counts["by_rule"] = dict(sorted(by_rule.items()))
+    return counts
+
+
+def build_report(findings: list[Finding], targets: dict[str, Any]) -> dict:
+    findings = apply_pragmas(findings)
+    findings = sorted(findings, key=Finding.sort_key)
+    return {
+        "report": "analysis",
+        "version": 1,
+        "targets": {k: targets[k] for k in sorted(targets)},
+        "findings": [f.to_dict() for f in findings],
+        "summary": dict(severity_counts(findings), targets_run=sorted(targets)),
+    }
+
+
+def dump_report(report: dict, path: str) -> None:
+    """Byte-deterministic serialization (matches the CI byte-compare gate)."""
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as fh:
+        json.dump(report, fh, indent=1, sort_keys=True)
+        fh.write("\n")

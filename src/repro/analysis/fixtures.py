@@ -1,0 +1,100 @@
+"""Known-bad (and known-good) step fixtures for analyzer self-tests.
+
+``deadlock_step`` is the canonical member of the bug class the checker
+exists for: a ``shard_map`` manual region where each rank runs a while loop
+whose trip count comes from its own allocation slice, with a ``psum`` INSIDE
+the body.  Ranks with small allocations exit the loop and stop participating
+while larger ranks still wait on the collective — a hang on real hardware,
+invisible to tracing, and exactly what ``HeteroStepConfig.validate`` forbids
+for ``mode="while"`` + per-microbatch FSDP.
+
+``clean_step`` is the corrected form (collective hoisted after the loop, a
+uniform per-rank count) and must produce zero findings.
+
+``suppressed_step`` is the bad form with the inline pragma on the offending
+line, exercising the ``# analysis: ignore[rule]`` waiver path end to end.
+
+The CLI runs all three as a selftest on every invocation: a broken analyzer
+(fixture NOT flagged) is itself an error-severity finding, while the
+fixture's own findings never enter the report.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.compat import shard_map
+
+__all__ = ["trace_deadlock_step", "trace_clean_step", "trace_suppressed_step"]
+
+
+def _trace(body, mesh):
+    n = mesh.shape["data"]
+    x = jnp.zeros((4 * n, 8), jnp.float32)
+    alloc = jnp.arange(n, dtype=jnp.int32) + 1  # rank r runs r+1 iterations
+    f = shard_map(body, mesh, in_specs=(P("data"), P("data")), out_specs=P("data"))
+    return jax.make_jaxpr(f)(x, alloc)
+
+
+def trace_deadlock_step(mesh):
+    """psum inside a divergent-trip-count while body — must be flagged."""
+
+    def per_rank(x, alloc):
+        trips = alloc[0]  # rank-varying: each rank sees its own allocation
+
+        def cond(c):
+            i, _ = c
+            return i < trips
+
+        def body(c):
+            i, acc = c
+            acc = acc + jax.lax.psum(acc, "data")  # deadlocks: trips diverge
+            return i + 1, acc
+
+        _, acc = jax.lax.while_loop(cond, body, (jnp.int32(0), x))
+        return acc
+
+    return _trace(per_rank, mesh)
+
+
+def trace_clean_step(mesh):
+    """Same shape of program, collective hoisted out — must pass."""
+
+    def per_rank(x, alloc):
+        trips = alloc[0]
+
+        def cond(c):
+            i, _ = c
+            return i < trips
+
+        def body(c):
+            i, acc = c
+            return i + 1, acc * 0.5 + x
+
+        _, acc = jax.lax.while_loop(cond, body, (jnp.int32(0), x))
+        return jax.lax.psum(acc, "data")  # uniform: once per rank, after
+
+    return _trace(per_rank, mesh)
+
+
+def trace_suppressed_step(mesh):
+    """The deadlock form, waived by an inline pragma on the psum line."""
+
+    def per_rank(x, alloc):
+        trips = alloc[0]
+
+        def cond(c):
+            i, _ = c
+            return i < trips
+
+        def body(c):
+            i, acc = c
+            acc = acc + jax.lax.psum(acc, "data")  # analysis: ignore[divergent-collective]
+            return i + 1, acc
+
+        _, acc = jax.lax.while_loop(cond, body, (jnp.int32(0), x))
+        return acc
+
+    return _trace(per_rank, mesh)

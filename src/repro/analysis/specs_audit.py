@@ -1,0 +1,222 @@
+"""Sharding-spec audit: every config x every declared mesh, abstractly.
+
+``dist/sharding.py`` assigns PartitionSpecs by parameter path with a
+divisibility gate that *silently* falls back to replication.  That is the
+right runtime behavior (smollm's 15 query heads must not crash GSPMD), but
+it means a config drift — a head count that stops dividing the model axis, a
+vocab that stops dividing — demotes a tensor to fully-replicated without any
+signal.  This audit makes the fallback loud:
+
+* ``specs-bad-axis`` (error) — a spec names a mesh axis that does not exist.
+* ``specs-axis-reuse`` (error) — one axis shards two dims of the same leaf.
+* ``specs-indivisible`` (error) — a sharded dim is not divisible by its axis
+  size product (the gate should make this impossible; the audit proves it).
+* ``specs-replicated-large`` (warning) — a leaf above a byte threshold ends
+  up fully replicated on a multi-device mesh (aggregated per tree).
+
+Everything runs on abstract shapes (``jax.eval_shape``) and stand-in meshes
+(only ``shape``/``axis_names`` are read), so no devices are required.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec
+
+from repro.analysis.findings import Finding
+
+__all__ = ["StandinMesh", "DECLARED_MESHES", "audit_arch", "audit_all_specs"]
+
+REPLICATED_WARN_BYTES = 32 * 2**20  # warn when a replicated leaf exceeds this
+
+
+@dataclasses.dataclass(frozen=True)
+class StandinMesh:
+    """Duck-types the two Mesh attributes the spec assigners read."""
+
+    _shape: tuple  # ((axis, size), ...) — hashable for dataclass frozen-ness
+
+    @property
+    def shape(self) -> dict:
+        return dict(self._shape)
+
+    @property
+    def axis_names(self) -> tuple:
+        return tuple(a for a, _ in self._shape)
+
+
+def _standin(**axes) -> StandinMesh:
+    return StandinMesh(tuple(axes.items()))
+
+
+# the meshes launch/dryrun.py lowers against (names match its --mesh modes)
+DECLARED_MESHES = {
+    "single_pod_16x16": _standin(data=16, model=16),
+    "multi_pod_2x16x16": _standin(pod=2, data=16, model=16),
+    "data8_8x1": _standin(data=8, model=1),
+}
+
+
+def _spec_axes(entry) -> tuple:
+    if entry is None:
+        return ()
+    return tuple(entry) if isinstance(entry, tuple) else (entry,)
+
+
+def _check_leaf(leaf, spec, sizes: dict, target: str, path: str) -> tuple[list[Finding], int]:
+    """Returns findings + the shard count (1 == fully replicated)."""
+    findings: list[Finding] = []
+    used: dict[str, int] = {}
+    n_shards = 1
+    for dim, entry in enumerate(tuple(spec)):
+        axes = _spec_axes(entry)
+        prod = 1
+        for ax in axes:
+            if ax not in sizes:
+                findings.append(
+                    Finding(
+                        rule="specs-bad-axis",
+                        severity="error",
+                        target=target,
+                        path=path,
+                        message=f"dim {dim} sharded over axis {ax!r} absent from mesh {sorted(sizes)}",
+                    )
+                )
+                continue
+            if ax in used:
+                findings.append(
+                    Finding(
+                        rule="specs-axis-reuse",
+                        severity="error",
+                        target=target,
+                        path=path,
+                        message=f"axis {ax!r} shards both dim {used[ax]} and dim {dim}",
+                    )
+                )
+            used[ax] = dim
+            prod *= sizes[ax]
+        if prod > 1 and leaf.shape[dim] % prod:
+            findings.append(
+                Finding(
+                    rule="specs-indivisible",
+                    severity="error",
+                    target=target,
+                    path=path,
+                    message=(
+                        f"dim {dim} of {tuple(leaf.shape)} not divisible by "
+                        f"{'x'.join(map(str, axes))} = {prod}"
+                    ),
+                )
+            )
+        n_shards *= prod
+    return findings, n_shards
+
+
+def _audit_tree(shapes: Any, specs: Any, mesh, target: str, tree_name: str) -> tuple[list[Finding], dict]:
+    sizes = {a: int(s) for a, s in dict(mesh.shape).items()}
+    n_dev = int(np.prod(list(sizes.values()))) if sizes else 1
+    findings: list[Finding] = []
+    n_leaves = n_sharded = 0
+    repl_bytes = 0
+    worst = ("", 0)
+    leaves, _ = jax.tree_util.tree_flatten_with_path(shapes)
+    spec_leaves = jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, PartitionSpec))
+    for (path, leaf), spec in zip(leaves, spec_leaves):
+        pstr = jax.tree_util.keystr(path)
+        f, n_shards = _check_leaf(leaf, spec, sizes, target, f"{tree_name}{pstr}")
+        findings.extend(f)
+        n_leaves += 1
+        nbytes = int(leaf.size) * np.dtype(leaf.dtype).itemsize
+        if n_shards > 1:
+            n_sharded += 1
+        elif nbytes > REPLICATED_WARN_BYTES and n_dev > 1:
+            repl_bytes += nbytes
+            if nbytes > worst[1]:
+                worst = (f"{tree_name}{pstr}", nbytes)
+    if repl_bytes:
+        findings.append(
+            Finding(
+                rule="specs-replicated-large",
+                severity="warning",
+                target=target,
+                path=tree_name,
+                message=(
+                    f"{repl_bytes} B of leaves over {REPLICATED_WARN_BYTES} B are fully "
+                    f"replicated on a {n_dev}-device mesh (largest: {worst[0]} at "
+                    f"{worst[1]} B) — the divisibility gate silently declined to shard them"
+                ),
+            )
+        )
+    meta = {
+        "n_leaves": n_leaves,
+        "n_sharded": n_sharded,
+        "replicated_large_bytes": repl_bytes,
+    }
+    return findings, meta
+
+
+def audit_arch(arch: str, mesh_name: str, mesh, *, decode_batch: int = 8, decode_seq: int = 256):
+    """Audit param/state/cache specs for one arch on one mesh."""
+    from repro.configs import get_config
+    from repro.dist.sharding import cache_specs, param_specs, state_specs
+    from repro.launch.specs import train_partition
+    from repro.models import transformer
+    from repro.optim import AdamWConfig, adamw_init
+
+    cfg = get_config(arch)
+    part = train_partition(cfg, mesh)
+    target = f"specs:{arch}@{mesh_name}"
+    findings: list[Finding] = []
+    meta: dict = {
+        "partition": {
+            "mode": part.mode,
+            "alloc_axis": part.alloc_axis,
+            "fsdp": part.fsdp_mode if isinstance(part.fsdp_mode, str) else bool(part.fsdp_mode),
+            "fsdp_axes": list(part.fsdp_axes),
+        }
+    }
+
+    params_shape = jax.eval_shape(lambda k: transformer.init_params(cfg, k), jax.random.PRNGKey(0))
+    pspecs = param_specs(params_shape, mesh, fsdp=bool(part.fsdp_mode), fsdp_axes=part.fsdp_axes)
+    f, m = _audit_tree(params_shape, pspecs, mesh, target, "params")
+    findings += f
+    meta["params"] = m
+
+    import jax.numpy as jnp
+
+    state_shape = jax.eval_shape(
+        lambda p: {"params": p, "opt": adamw_init(p, AdamWConfig()), "step": jnp.zeros((), jnp.int32)},
+        params_shape,
+    )
+    sspecs = state_specs(state_shape, mesh, fsdp=bool(part.fsdp_mode), fsdp_axes=part.fsdp_axes)
+    f, m = _audit_tree(state_shape, sspecs, mesh, target, "state")
+    findings += f
+    meta["state"] = m
+
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    cache_shape = jax.eval_shape(lambda: transformer.init_cache(cfg, decode_batch, decode_seq))
+    cspecs = cache_specs(cache_shape, mesh, dp_axes=dp)
+    f, m = _audit_tree(cache_shape, cspecs, mesh, target, "cache")
+    findings += f
+    meta["cache"] = m
+    return findings, meta
+
+
+def audit_all_specs(archs=None, meshes=None) -> tuple[list[Finding], dict]:
+    """All configs x all declared meshes; the CLI ``--target specs`` body."""
+    from repro.configs import list_archs
+
+    archs = sorted(archs if archs is not None else list_archs())
+    meshes = dict(meshes if meshes is not None else DECLARED_MESHES)
+    findings: list[Finding] = []
+    metas: dict = {}
+    for mesh_name in sorted(meshes):
+        for arch in archs:
+            f, m = audit_arch(arch, mesh_name, meshes[mesh_name])
+            findings.extend(f)
+            metas[f"{arch}@{mesh_name}"] = m
+    return findings, metas

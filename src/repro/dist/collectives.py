@@ -113,19 +113,26 @@ def ring_all_gather(x: jnp.ndarray, axis_name: str, dim: int = 0) -> jnp.ndarray
     return jnp.concatenate([buf[j] for j in range(n)], axis=dim)
 
 
-def ring_reduce_scatter(x: jnp.ndarray, axis_name: str, dim: int = 0) -> jnp.ndarray:
+def ring_reduce_scatter(x: jnp.ndarray, axis_name: str, dim: int = 0, *, label: str = "") -> jnp.ndarray:
     """Ring reduce-scatter: rank *i* gets chunk *i* (along ``dim``) of the sum.
 
     Equivalent of ``lax.psum_scatter(x, axis_name, scatter_dimension=dim,
     tiled=True)``; requires ``x.shape[dim]`` divisible by the ring length
     (the sharding rules' divisibility gate guarantees this for param/grad
     trees).  Accumulates in the input dtype, like ``psum_scatter``.
+    ``label`` names the offending parameter in the divisibility error when
+    called per-leaf via :func:`reduce_scatter_tree`.
     """
     n = jax.lax.psum(1, axis_name)
     if n == 1:
         return x
     if x.shape[dim] % n:
-        raise ValueError(f"dim {dim} of {x.shape} not divisible by ring length {n}")
+        where = f" at param {label!r}" if label else ""
+        raise ValueError(
+            f"dim {dim} of {x.shape}{where} not divisible by ring length {n} "
+            f"(axis {axis_name!r}) — the spec assigner should have left this "
+            f"dim unsharded; check param_specs' divisibility gate"
+        )
     idx = jax.lax.axis_index(axis_name)
     perm = [(i, (i + 1) % n) for i in range(n)]
     chunks = jnp.stack(jnp.split(x, n, axis=dim))  # (n, ..., chunk, ...)
@@ -196,20 +203,34 @@ def reduce_scatter_tree(
     * a sharded dim over a non-reduce axis -> slice the local chunk (the
       values are already identical there, summing would overcount);
     * reduce axes that shard no dim of the leaf -> plain ``psum``.
+
+    Errors (divisibility, spec/mesh mismatches) name the failing leaf by its
+    tree path so a bad spec is traceable to a parameter, not just a shape.
     """
 
-    def scatter_leaf(g, spec):
+    def scatter_leaf(path, g, spec):
+        label = jax.tree_util.keystr(path)
         remaining = list(reduce_axes)
         for dim, axes in _spec_dims(spec, g.ndim):
             for ax in axes:  # major axis first
                 if ax in remaining:
                     if use_ring:
-                        g = ring_reduce_scatter(g, ax, dim)
+                        g = ring_reduce_scatter(g, ax, dim, label=label)
                     else:
+                        if g.shape[dim] % jax.lax.psum(1, ax):
+                            raise ValueError(
+                                f"dim {dim} of {g.shape} at param {label!r} not divisible "
+                                f"by axis {ax!r} size {jax.lax.psum(1, ax)} for psum_scatter"
+                            )
                         g = jax.lax.psum_scatter(g, ax, scatter_dimension=dim, tiled=True)
                     remaining.remove(ax)
                 else:
                     n = jax.lax.psum(1, ax)
+                    if g.shape[dim] % n:
+                        raise ValueError(
+                            f"dim {dim} of {g.shape} at param {label!r} not divisible by "
+                            f"non-reduce axis {ax!r} size {n} — cannot slice the local chunk"
+                        )
                     chunk = g.shape[dim] // n
                     start = jax.lax.axis_index(ax) * chunk
                     g = jax.lax.dynamic_slice_in_dim(g, start, chunk, axis=dim)
@@ -217,7 +238,7 @@ def reduce_scatter_tree(
             g = jax.lax.psum(g, ax)
         return g
 
-    return jax.tree.map(scatter_leaf, tree, specs)
+    return jax.tree_util.tree_map_with_path(scatter_leaf, tree, specs)
 
 
 # ---------------------------------------------------------------------------

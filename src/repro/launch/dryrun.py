@@ -17,8 +17,10 @@ Usage:
 
 Per cell it records: compile wall-time, per-device memory analysis
 (arguments / temp / output — the "fits in 16 GB HBM" proof), per-device HLO
-FLOPs + bytes from cost_analysis, and the collective-op inventory parsed
-from the compiled HLO (op type, count, result bytes) for §Roofline.
+FLOPs + bytes from cost_analysis, the collective-op inventory parsed
+from the compiled HLO (op type, count, result bytes) for §Roofline, and the
+``repro.analysis`` cost-model estimate next to the XLA numbers (warning on
+>2x disagreement in either direction — estimate drift).
 """
 
 import argparse  # noqa: E402
@@ -136,6 +138,45 @@ def loop_aware_collective_bytes(hlo_text: str, trips: list[int]) -> dict:
     return {"by_depth_bytes": by_depth, "weighted_bytes": weighted, "trips": trips}
 
 
+def _analysis_crosscheck(plan, mesh, rec: dict) -> dict:
+    """Cross-check ``repro.analysis``'s jaxpr cost model against XLA.
+
+    The analyzer estimates from the GLOBAL pre-SPMD trace; dividing by device
+    count approximates the per-device share that ``cost_analysis`` reports.
+    Both count loop bodies once, so the figures are comparable; a >2x gap in
+    either direction flags estimate drift (in the cost model or in what XLA
+    fuses away) without failing the cell.
+    """
+    try:
+        from repro.analysis.costmodel import estimate_cost, per_device
+
+        n_dev = 1
+        for s in dict(mesh.shape).values():
+            n_dev *= int(s)
+        closed = jax.make_jaxpr(plan.fn)(*plan.abstract_args)
+        dev = per_device(estimate_cost(closed), n_dev)
+        est_flops = dev["flops"]
+        est_bytes = dev["bytes"]
+        out = {
+            "analysis_flops_per_dev": est_flops,
+            "analysis_bytes_per_dev": est_bytes,
+        }
+        hlo_flops = rec.get("hlo_flops_per_dev", 0.0)
+        if hlo_flops > 0 and est_flops > 0:
+            ratio = est_flops / hlo_flops
+            out["analysis_flops_ratio"] = round(ratio, 3)
+            if ratio > 2.0 or ratio < 0.5:
+                out["analysis_flops_warn"] = True
+                print(
+                    f"[WARN] analysis/XLA flops disagree {ratio:.2f}x "
+                    f"({est_flops:.3e} vs {hlo_flops:.3e} per dev) — cost model drift?",
+                    flush=True,
+                )
+        return out
+    except Exception as e:  # noqa: BLE001 — the cross-check must never fail a cell
+        return {"analysis_crosscheck_error": f"{type(e).__name__}: {e}"}
+
+
 def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, hetero: bool) -> dict:
     rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "hetero": hetero}
     reason = skip_reason(arch, shape_name)
@@ -182,6 +223,7 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, hetero: bool) -> 
             collectives=colls,
             collective_bytes_per_dev=int(sum(s["bytes"] for s in colls.values())),
         )
+        rec.update(_analysis_crosscheck(plan, mesh, rec))
     except Exception as e:  # noqa: BLE001 — a failed cell is a bug; record it
         rec.update(
             status="error",

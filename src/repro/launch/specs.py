@@ -25,10 +25,60 @@ from repro.dist.sharding import cache_specs, param_specs, state_specs
 from repro.models import transformer
 from repro.models.config import ModelConfig
 
-__all__ = ["CellPlan", "plan_cell", "FSDP_THRESHOLD"]
+__all__ = ["CellPlan", "plan_cell", "train_partition", "TrainPartition", "FSDP_THRESHOLD"]
 
 # params above this use FSDP (and hence masked-mode allocation on single-pod)
 FSDP_THRESHOLD = 4e9
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainPartition:
+    """The (mode, allocation axis, FSDP flavor) decision for one arch x mesh.
+
+    Shared between ``_plan_train`` (which builds the real step) and
+    ``repro.analysis.specs_audit`` (which re-derives every cell's sharding
+    abstractly) so the two can never disagree about which partitioning a
+    config trains under.
+    """
+
+    alloc_axis: str
+    mode: str  # "while" | "masked"
+    fsdp_mode: bool | str  # False | True | "gather" — HeteroStepConfig.fsdp
+    fsdp_axes: tuple[str, ...]
+    accum_cap: int | None  # multi-pod caps grad accumulation at 8
+
+
+def train_partition(cfg: ModelConfig, mesh) -> TrainPartition:
+    """Pick the train partitioning for ``cfg`` on ``mesh``.
+
+    Only reads ``mesh.axis_names`` so abstract stand-in meshes work.  The
+    rationale for each branch (XLA partitioner limits, ZeRO legality) lives
+    in the comments of the original decision block, now here.
+    """
+    multi_pod = "pod" in mesh.axis_names
+    fsdp = _uses_fsdp(cfg)
+    huge = cfg.param_count()["total"] > 1e11  # jamba-class: needs every memory lever
+    if multi_pod and huge:
+        # 398B-class: full ZeRO-3 over (pod, data) — a gathered params copy
+        # would not fit, so per-microbatch FSDP with masked allocation (the
+        # only legal combination at this scale), see hetero_step.
+        return TrainPartition("pod", "masked", fsdp, ("pod", "data"), 8)
+    if multi_pod and (cfg.moe is not None or fsdp):
+        # XLA limitation (not ours): the SPMD partitioner CHECK-fails
+        # (spmd_partitioner_util.cc:504) on gather/all-to-all patterns (FSDP
+        # param gathers, MoE dispatch) inside a partial-auto shard_map over
+        # "pod".  Masked allocation over "pod" is numerically identical and
+        # partitions cleanly; true variable-trip-count while-mode is used for
+        # every non-FSDP arch.  Recorded in DESIGN.md §5.
+        return TrainPartition("pod", "masked", fsdp, ("data",), 8)
+    if multi_pod:
+        return TrainPartition("pod", "while", fsdp, ("data",), 8)
+    if fsdp:
+        # ZeRO gather-mode: state lives sharded over "data", ONE all-gather
+        # per step outside the per-rank loops — while-mode's divergent trip
+        # counts stay legal because the collective count per rank is uniform.
+        return TrainPartition("data", "while", "gather", ("data",), None)
+    return TrainPartition("data", "while", False, ("data",), None)
 
 
 @dataclasses.dataclass
@@ -93,43 +143,15 @@ def _plan_train(arch, shape, cfg, mesh, params_shape, hetero) -> CellPlan:
     from repro.optim import AdamWConfig
 
     multi_pod = "pod" in mesh.axis_names
-    fsdp = _uses_fsdp(cfg)
     total_params = cfg.param_count()["total"]
-    huge = total_params > 1e11  # jamba-class: needs every memory lever
+    huge = total_params > 1e11
     accum = train_accum(arch)
 
-    fsdp_mode: bool | str = fsdp  # what HeteroStepConfig.fsdp gets
-    if multi_pod and huge:
-        # 398B-class: full ZeRO-3 over (pod, data) — a gathered params copy
-        # would not fit, so per-microbatch FSDP with masked allocation (the
-        # only legal combination at this scale), see hetero_step.
-        alloc_axis, mode = "pod", "masked"
-        fsdp_axes: tuple[str, ...] = ("pod", "data")
-        accum = min(accum, 8)
-    elif multi_pod and (cfg.moe is not None or fsdp):
-        # XLA limitation (not ours): the SPMD partitioner CHECK-fails
-        # (spmd_partitioner_util.cc:504) on gather/all-to-all patterns (FSDP
-        # param gathers, MoE dispatch) inside a partial-auto shard_map over
-        # "pod".  Masked allocation over "pod" is numerically identical and
-        # partitions cleanly; true variable-trip-count while-mode is used for
-        # every non-FSDP arch.  Recorded in DESIGN.md §5.
-        alloc_axis, mode = "pod", "masked"
-        fsdp_axes = ("data",)
-        accum = min(accum, 8)
-    elif multi_pod:
-        alloc_axis, mode = "pod", "while"  # params never sharded over pod
-        fsdp_axes = ("data",)
-        accum = min(accum, 8)  # keep micro_bs divisible by the data axis
-    elif fsdp:
-        # ZeRO gather-mode: state lives sharded over "data", ONE all-gather
-        # per step outside the per-rank loops — while-mode's divergent trip
-        # counts stay legal because the collective count per rank is uniform.
-        alloc_axis, mode = "data", "while"
-        fsdp_mode = "gather"
-        fsdp_axes = ("data",)
-    else:
-        alloc_axis, mode = "data", "while"
-        fsdp_axes = ("data",)
+    part = train_partition(cfg, mesh)
+    alloc_axis, mode = part.alloc_axis, part.mode
+    fsdp_mode, fsdp_axes = part.fsdp_mode, part.fsdp_axes
+    if part.accum_cap is not None:
+        accum = min(accum, part.accum_cap)  # keep micro_bs divisible by "data"
 
     pspecs = param_specs(params_shape, mesh, fsdp=bool(fsdp_mode), fsdp_axes=fsdp_axes)
 

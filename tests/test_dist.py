@@ -296,6 +296,29 @@ def test_step_config_rejects_bad_fsdp_combinations():
         HeteroStepConfig(w_max=2, micro_bs=2, seq_len=8, fsdp="zero3")
 
 
+def test_reduce_scatter_divisibility_error_names_param_path():
+    """A bad spec must name the failing LEAF, not just a shape: the error is
+    raised per-parameter so the user can trace it back to the spec table."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist import reduce_scatter_tree
+
+    tree = {"layer0": {"w": jnp.zeros((3, 4))}}  # dim 0 = 3: indivisible by 2
+    specs = {"layer0": {"w": P("r", None)}}
+
+    def run(use_ring):
+        def f(_x, t):
+            return reduce_scatter_tree(t, specs, ("r",), use_ring=use_ring)
+
+        # vmap(axis_name=...) stands in for a 2-rank mesh axis in-process
+        jax.vmap(f, in_axes=(0, None), axis_name="r")(jnp.zeros((2,)), tree)
+
+    for use_ring in (True, False):
+        with pytest.raises(ValueError, match=r"layer0.*w") as ei:
+            run(use_ring)
+        assert "not divisible" in str(ei.value)
+
+
 def test_build_train_step_rejects_alloc_over_w_max():
     """The while body clamps alloc to W silently; the host-side guard must
     turn that into a loud error before any microbatch is dropped."""
