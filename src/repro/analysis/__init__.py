@@ -1,27 +1,48 @@
 """Static analysis over traced programs — the merge gate for new step families.
 
-``python -m repro.analysis [--target train|serve|kernels|specs|all]`` proves:
+``python -m repro.analysis [--target train|serve|kernels|specs|protocol|all]``
+proves:
 
 * collective uniformity — no rank-divergent collective sequences inside
   ``shard_map`` manual regions (the while-mode FSDP deadlock class);
 * Pallas kernel safety — block origins in bounds over the whole grid,
   sentinel clamps intentional, VMEM within budget;
 * sharding sanity — every config x declared mesh: divisible specs, no
-  silently-replicated large tensors.
+  silently-replicated large tensors;
+* protocol safety — bounded explicit-state model checking of the elastic
+  membership protocol and paged-KV admission over the REAL production
+  classes (``repro.analysis.protocol``), with minimized replayable
+  counterexample scripts on violation.
 
 See ``cli.py`` for the entry point, ``findings.py`` for the report format.
 """
 
 from repro.analysis.collectives import check_collective_uniformity
 from repro.analysis.costmodel import estimate_cost
-from repro.analysis.findings import Finding, apply_pragmas, build_report
+from repro.analysis.findings import (
+    Finding,
+    apply_pragmas,
+    build_report,
+    scan_pragmas,
+    stale_pragma_findings,
+)
 from repro.analysis.kernels import SentinelCheck, audit_pallas_eqn, audit_traced
+from repro.analysis.protocol import (
+    ElasticModel,
+    ServeModel,
+    explore,
+    format_script,
+    parse_script,
+    replay,
+)
 from repro.analysis.specs_audit import DECLARED_MESHES, StandinMesh, audit_all_specs
 
 __all__ = [
     "Finding",
     "apply_pragmas",
     "build_report",
+    "scan_pragmas",
+    "stale_pragma_findings",
     "check_collective_uniformity",
     "estimate_cost",
     "SentinelCheck",
@@ -30,4 +51,10 @@ __all__ = [
     "StandinMesh",
     "DECLARED_MESHES",
     "audit_all_specs",
+    "ElasticModel",
+    "ServeModel",
+    "explore",
+    "replay",
+    "format_script",
+    "parse_script",
 ]

@@ -11,12 +11,22 @@ Targets:
   grid/block divisibility.
 * ``specs``  — audit param/state/cache PartitionSpecs for every config in
   the registry against every declared mesh.
+* ``protocol`` — bounded explicit-state model checking of the elastic
+  membership protocol (FailureDetector/ElasticCoordinator/FaultInjector)
+  and paged-KV admission (PagePool/Scheduler), exhaustively to the
+  documented depth bounds; violations carry minimized replayable
+  ``kind@step:spec`` counterexample scripts (``--cex-out`` writes them).
 
 Every invocation also runs a selftest: the known-deadlock fixture
 (``fixtures.trace_deadlock_step``) must be flagged, the clean twin must
 pass, and the pragma-waived twin must come back suppressed — a broken
-analyzer is itself an error-severity finding.  Exit status is nonzero iff
-any unsuppressed error-severity finding exists.
+analyzer is itself an error-severity finding.  The ``protocol`` target
+additionally checks itself against known-bad models (a rescale that remaps
+detector state by position instead of survivor index; a retirement that
+drops the page release): each must yield a minimized counterexample that
+REPLAYS, or the run fails.  Exit status is nonzero iff any unsuppressed
+error-severity finding exists.  Full-target runs also flag stale pragmas
+(waivers that suppressed nothing).
 
 The report is byte-deterministic (no timestamps, sorted findings, sorted
 keys); CI runs this twice and byte-compares.
@@ -26,6 +36,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 import jax
@@ -37,7 +48,12 @@ from repro.analysis.findings import Finding, build_report, dump_report
 from repro.analysis.kernels import DEFAULT_VMEM_BUDGET, SentinelCheck, audit_traced
 from repro.analysis.specs_audit import audit_all_specs
 
-TARGETS = ("train", "serve", "kernels", "specs")
+TARGETS = ("train", "serve", "kernels", "specs", "protocol")
+
+# documented exploration bounds: the clean models' FULL reachable graphs to
+# these depths fit comfortably in the explorer's state ceiling, and every
+# seeded bug class is found well inside them
+PROTOCOL_DEPTHS = {"elastic": 7, "serve": 12}
 
 # legal smoke-scale combos; (while, fsdp=True) is rejected by validate() and
 # covered by the deadlock fixture instead
@@ -227,7 +243,93 @@ def analyze_specs() -> tuple[list[Finding], dict]:
     return audit_all_specs()
 
 
-def selftest(mesh) -> tuple[list[Finding], dict]:
+def analyze_protocol() -> tuple[list[Finding], dict]:
+    """Model-check the two protocol harnesses over the real classes."""
+    from repro.analysis.protocol import ElasticModel, ServeModel, explore, format_script
+
+    models = {
+        "elastic": (ElasticModel(), PROTOCOL_DEPTHS["elastic"]),
+        "serve": (ServeModel(), PROTOCOL_DEPTHS["serve"]),
+    }
+    findings: list[Finding] = []
+    meta: dict = {}
+    for name, (model, depth) in models.items():
+        target = f"protocol:{name}"
+        res = explore(model, max_depth=depth)
+        for v in res.violations:
+            findings.append(
+                Finding(
+                    rule=f"protocol-{v.kind}",  # -invariant | -deadlock | -action-error
+                    severity="error",
+                    target=target,
+                    path=format_script(v.script),
+                    message=f"{v.message} [replay script: {format_script(v.script) or '<initial state>'}]",
+                )
+            )
+        if not res.exhausted:
+            findings.append(
+                Finding(
+                    rule="protocol-truncated",
+                    severity="warning",
+                    target=target,
+                    path="",
+                    message=(
+                        f"exploration truncated by {res.truncated_by} — coverage below "
+                        f"the documented depth bound ({depth}); shrink the model or "
+                        "raise the ceiling"
+                    ),
+                )
+            )
+        meta[name] = dict(res.stats(), max_depth=depth)
+    return findings, meta
+
+
+def selftest_protocol() -> tuple[list[Finding], dict]:
+    """Prove the model checker catches the bug classes it exists for, and
+    that its counterexamples replay.  Known-bad models: a rescale that
+    remaps detector state by position instead of survivor index, and a
+    retirement that forgets the page release."""
+    from repro.analysis.protocol import (
+        ElasticModel,
+        ServeModel,
+        explore,
+        format_script,
+        parse_script,
+        replay,
+    )
+
+    cases = {
+        "elastic-remap-identity": (lambda: ElasticModel(buggy="remap-identity"), 6),
+        "serve-drop-release": (lambda: ServeModel(buggy="drop-release"), 8),
+    }
+    findings: list[Finding] = []
+    meta: dict = {}
+    for name, (make, depth) in cases.items():
+        res = explore(make(), max_depth=depth, max_violations=1)
+        script, replayed = "", False
+        if res.violations:
+            v = res.violations[0]
+            script = format_script(v.script)
+            rv = replay(make(), parse_script(script))
+            replayed = rv is not None and rv.kind == v.kind
+        if not replayed:
+            findings.append(
+                Finding(
+                    rule="analysis-selftest",
+                    severity="error",
+                    target=f"selftest:protocol-{name}",
+                    path="",
+                    message=(
+                        f"known-bad model {name!r} did not produce a minimized "
+                        "REPLAYABLE counterexample — the protocol checker is broken"
+                    ),
+                )
+            )
+        meta[name] = {"counterexample": script, "replayed": replayed, "n_states": res.n_states}
+    return findings, meta
+
+
+def selftest(mesh, used_pragmas: set | None = None) -> tuple[list[Finding], dict]:
     """Prove the checker catches the deadlock class it exists for.
 
     The fixtures' own findings never enter the report — only meta-findings
@@ -268,7 +370,7 @@ def selftest(mesh) -> tuple[list[Finding], dict]:
     supp, _ = check_collective_uniformity(
         fixtures.trace_suppressed_step(mesh), "selftest:suppressed"
     )
-    supp = apply_pragmas(supp)
+    supp = apply_pragmas(supp, used=used_pragmas)
     if not any(f.suppressed for f in supp):
         findings.append(
             Finding(
@@ -292,7 +394,8 @@ def run(targets: list[str], *, vmem_budget: int = DEFAULT_VMEM_BUDGET) -> dict:
     mesh = _mesh()
     findings: list[Finding] = []
     metas: dict = {"mesh": {a: int(s) for a, s in dict(mesh.shape).items()}}
-    f, m = selftest(mesh)
+    used_pragmas: set = set()
+    f, m = selftest(mesh, used_pragmas=used_pragmas)
     findings += f
     metas["selftest"] = m
     if "train" in targets:
@@ -311,7 +414,45 @@ def run(targets: list[str], *, vmem_budget: int = DEFAULT_VMEM_BUDGET) -> dict:
         f, m = analyze_specs()
         findings += f
         metas["specs"] = m
-    return build_report(findings, metas)
+    if "protocol" in targets:
+        f, m = analyze_protocol()
+        findings += f
+        metas["protocol"] = m
+        f, m = selftest_protocol()
+        findings += f
+        metas["selftest_protocol"] = m
+    return build_report(
+        findings, metas, used_pragmas=used_pragmas, pragma_scan_root=_pragma_scan_root(targets)
+    )
+
+
+def _pragma_scan_root(targets) -> str | None:
+    """Stale-pragma audit root — only for full-target runs: a partial run
+    never generates the findings a waiver exists for, so every waiver would
+    look stale."""
+    if not set(TARGETS).issubset(targets):
+        return None
+    import repro
+
+    return list(repro.__path__)[0]  # namespace package: __file__ is None
+
+
+def write_counterexamples(report: dict, out_dir: str) -> None:
+    """One replayable script file per protocol violation (CI uploads these
+    as artifacts when the analysis lane fails)."""
+    os.makedirs(out_dir, exist_ok=True)
+    n = 0
+    for f in report["findings"]:
+        if not f["rule"].startswith("protocol-") or not f["path"]:
+            continue
+        n += 1
+        name = f"{f['target'].replace(':', '-')}-{n:02d}.txt"
+        with open(os.path.join(out_dir, name), "w") as fh:
+            fh.write(f"# {f['rule']} in {f['target']}\n# {f['message']}\n{f['path']}\n")
+    for name, m in report["targets"].get("selftest_protocol", {}).items():
+        if m.get("counterexample"):
+            with open(os.path.join(out_dir, f"selftest-{name}.txt"), "w") as fh:
+                fh.write(f"# selftest counterexample (replayed={m['replayed']})\n{m['counterexample']}\n")
 
 
 def main(argv=None) -> int:
@@ -321,12 +462,19 @@ def main(argv=None) -> int:
     ap.add_argument(
         "--vmem-budget", type=int, default=DEFAULT_VMEM_BUDGET, help="Pallas VMEM budget in bytes"
     )
+    ap.add_argument(
+        "--cex-out",
+        default=None,
+        help="directory for protocol counterexample scripts (one .txt per violation)",
+    )
     args = ap.parse_args(argv)
     targets = list(TARGETS) if args.target == "all" else [args.target]
 
     report = run(targets, vmem_budget=args.vmem_budget)
     if args.json_out:
         dump_report(report, args.json_out)
+    if args.cex_out:
+        write_counterexamples(report, args.cex_out)
 
     s = report["summary"]
     print(

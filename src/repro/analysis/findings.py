@@ -22,9 +22,17 @@ import json
 import linecache
 import os
 import re
+import tokenize
 from typing import Any, Iterable
 
-__all__ = ["Finding", "apply_pragmas", "build_report", "severity_counts"]
+__all__ = [
+    "Finding",
+    "apply_pragmas",
+    "build_report",
+    "scan_pragmas",
+    "severity_counts",
+    "stale_pragma_findings",
+]
 
 SEVERITIES = ("error", "warning", "note")
 _SEV_RANK = {s: i for i, s in enumerate(SEVERITIES)}
@@ -74,8 +82,13 @@ def src_of(file_name: str | None, line: int | None) -> str:
     return f"{_relpath(file_name)}:{line}"
 
 
-def apply_pragmas(findings: Iterable[Finding]) -> list[Finding]:
-    """Mark findings whose source line carries ``# analysis: ignore[rule]``."""
+def apply_pragmas(findings: Iterable[Finding], used: set | None = None) -> list[Finding]:
+    """Mark findings whose source line carries ``# analysis: ignore[rule]``.
+
+    ``used`` (optional) accumulates ``(relpath, lineno, rule)`` for every
+    pragma that actually suppressed something — the stale-pragma audit
+    (:func:`stale_pragma_findings`) diffs the tree's pragmas against it.
+    """
     out = []
     for f in findings:
         if f.src:
@@ -84,25 +97,103 @@ def apply_pragmas(findings: Iterable[Finding]) -> list[Finding]:
             m = _PRAGMA_RE.search(line)
             if m and f.rule in {r.strip() for r in m.group(1).split(",")}:
                 f = dataclasses.replace(f, suppressed=True)
+                if used is not None:
+                    used.add((_relpath(fname), int(lineno), f.rule))
         out.append(f)
+    return out
+
+
+def scan_pragmas(root: str) -> list[tuple[str, int, str]]:
+    """Every ``# analysis: ignore[rule]`` site under ``root``: sorted
+    ``(relpath, lineno, rule)`` triples, one per waived rule.
+
+    Only genuine ``#`` comment tokens count — pragma *examples* inside
+    docstrings (this module has several) are string content, not waivers,
+    and must not show up as stale.
+    """
+    sites = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames if not d.startswith((".", "_")))
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            try:
+                with open(path, encoding="utf-8") as fh:
+                    toks = list(tokenize.generate_tokens(fh.readline))
+            except (OSError, SyntaxError, tokenize.TokenError):
+                continue
+            for tok in toks:
+                if tok.type != tokenize.COMMENT:
+                    continue
+                m = _PRAGMA_RE.search(tok.string)
+                if m:
+                    for rule in m.group(1).split(","):
+                        sites.append((_relpath(path), tok.start[0], rule.strip()))
+    return sorted(sites)
+
+
+def stale_pragma_findings(used: set, root: str) -> list[Finding]:
+    """Warning findings for waivers that suppressed nothing this run.
+
+    A pragma whose rule no longer fires is debt: either the underlying
+    issue was fixed (drop the waiver) or the rule name rotted (the waiver
+    silently stopped guarding anything).  Only meaningful when EVERY
+    analyzer that could produce the waived finding actually ran — the CLI
+    gates this on a full-target invocation.
+    """
+    out = []
+    for fname, lineno, rule in scan_pragmas(root):
+        if (fname, lineno, rule) not in used:
+            out.append(
+                Finding(
+                    rule="stale-pragma",
+                    severity="warning",
+                    target="pragmas",
+                    path=f"{fname}:{lineno}",
+                    message=(
+                        f"'# analysis: ignore[{rule}]' suppressed nothing this run — "
+                        "the waived finding no longer fires; remove the pragma or fix "
+                        "the rule name"
+                    ),
+                    src=f"{fname}:{lineno}",
+                )
+            )
     return out
 
 
 def severity_counts(findings: Iterable[Finding]) -> dict:
     counts = {"n_error": 0, "n_warning": 0, "n_note": 0, "n_suppressed": 0}
     by_rule: dict[str, int] = {}
+    by_pragma: dict[str, int] = {}
     for f in findings:
         if f.suppressed:
             counts["n_suppressed"] += 1
+            key = f"{f.src}[{f.rule}]"  # one pragma site may waive several rules
+            by_pragma[key] = by_pragma.get(key, 0) + 1
         else:
             counts[f"n_{f.severity}"] += 1
         by_rule[f.rule] = by_rule.get(f.rule, 0) + 1
     counts["by_rule"] = dict(sorted(by_rule.items()))
+    counts["by_pragma"] = dict(sorted(by_pragma.items()))
     return counts
 
 
-def build_report(findings: list[Finding], targets: dict[str, Any]) -> dict:
-    findings = apply_pragmas(findings)
+def build_report(
+    findings: list[Finding],
+    targets: dict[str, Any],
+    *,
+    used_pragmas: set | None = None,
+    pragma_scan_root: str | None = None,
+) -> dict:
+    """Assemble the byte-deterministic report.  ``used_pragmas`` carries
+    suppression sites already consumed outside the report's own findings
+    (the selftest's fixture pragma); ``pragma_scan_root`` (full runs only)
+    turns unconsumed waivers under that tree into stale-pragma warnings."""
+    used = set() if used_pragmas is None else used_pragmas
+    findings = apply_pragmas(findings, used=used)
+    if pragma_scan_root is not None:
+        findings = findings + stale_pragma_findings(used, pragma_scan_root)
     findings = sorted(findings, key=Finding.sort_key)
     return {
         "report": "analysis",

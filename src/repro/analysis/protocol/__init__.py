@@ -1,0 +1,43 @@
+"""Bounded explicit-state model checking of the repo's two stateful
+protocols, driving the REAL production classes:
+
+* :mod:`.elastic_model` — heartbeat/failure-detection/rescale/checkpoint/
+  resume over ``FailureDetector`` + ``ElasticCoordinator`` +
+  ``FaultInjector`` + ``StragglerMonitor``, with an identity-keyed shadow
+  oracle proving detector/injector state maps to the right workers across
+  consecutive rescales;
+* :mod:`.serve_model` — paged-KV admission over ``PagePool`` + the real
+  ``Scheduler``, proving leak-freedom, no stale slot occupancy, and that
+  reservation-gated admission never strands an admitted request.
+
+:mod:`.explorer` is the generic engine: BFS over canonical fingerprints,
+invariant callbacks on every state, deadlock detection, shortest
+counterexamples delta-shrunk to replayable ``kind@step:spec`` scripts.
+``python -m repro.analysis --target protocol`` runs both models.
+"""
+
+from repro.analysis.protocol.elastic_model import ElasticModel, ElasticState
+from repro.analysis.protocol.explorer import (
+    ExploreResult,
+    Violation,
+    explore,
+    format_script,
+    parse_script,
+    replay,
+    shrink,
+)
+from repro.analysis.protocol.serve_model import ServeModel, ServeState
+
+__all__ = [
+    "ElasticModel",
+    "ElasticState",
+    "ServeModel",
+    "ServeState",
+    "ExploreResult",
+    "Violation",
+    "explore",
+    "replay",
+    "shrink",
+    "format_script",
+    "parse_script",
+]

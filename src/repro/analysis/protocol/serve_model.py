@@ -1,0 +1,281 @@
+"""Protocol model of paged-KV admission, driving the REAL production
+classes: :class:`~repro.serve.paged.PagePool` and
+:class:`~repro.serve.scheduler.Scheduler`.
+
+The device half of the serve engine (jit'd prefill/decode) is replaced by
+:class:`_ModelEngine`, a host-side twin that performs exactly the pool and
+slot bookkeeping ``ServeEngine`` performs — same call sequence
+(``reserve_or_fail`` + ``allocate_prefix`` at admission, ``ensure`` then
+position/counter increments at each tick, whole-table ``release`` on
+EOS/max_gen retirement, retire-at-admission for ``max_gen == 1``) — so the
+real ``Scheduler.admit`` drives it through the identical engine protocol
+(``free_slots`` / ``has_active`` / ``admissible`` / ``can_admit_now`` /
+``admit`` / ``n_slots``).  Token VALUES never influence pool accounting, so
+the twin covers the full admission/retire state machine without a device.
+
+The model interleaves submit / admit / tick / EOS-retire / reset actions
+and machine-checks on EVERY reachable state:
+
+* ``PagePool.check_leak_free()`` — every page free or held exactly once;
+* **no stale occupancy**: a slot with no active request holds no pages and
+  no reservation (catches the drop-release bug class: ``check_leak_free``
+  alone cannot, because a leaked page is still held exactly once);
+* **reservation-gated admission never strands a request**: every active
+  slot's outstanding need (reserved − allocated pages) is covered by the
+  free list, so an admitted request can always run to its generation
+  budget — the paper-level guarantee the reservation exists to provide;
+* reservation/allocation accounting per slot matches the slot's position
+  (``allocated == pages_for(pos)``, never past the reservation).
+
+FIFO backpressure deadlocks surface through the explorer's deadlock
+detection: ``quiescent`` is "queue empty and no active slot", so a state
+where queued work can never admit and nothing can tick is reported with a
+shortest replayable script.
+"""
+
+from __future__ import annotations
+
+import copy
+import dataclasses
+
+import numpy as np
+
+from repro.models.attention import PagedLayout
+from repro.serve.paged import PagePool
+from repro.serve.scheduler import Request, Scheduler, SchedulerConfig
+
+__all__ = ["ServeModel", "ServeState"]
+
+# (prompt_len, max_gen) menu — shapes the submit action can enqueue.  All
+# admissible for the default pool; (5, 1) also covers retire-at-admission.
+_DEFAULT_SHAPES = ((1, 3), (3, 2), (5, 1))
+
+
+@dataclasses.dataclass
+class _SlotRT:
+    """Host bookkeeping of one active slot, mirroring ``ServeEngine._Slot``:
+    ``pos`` = next KV position to write, ``generated`` counts sampled
+    tokens, ``eos`` marks that this slot's next sampled token is EOS."""
+
+    rid: int
+    pos: int
+    generated: int
+    max_gen: int
+    eos: bool = False
+
+
+class _ModelEngine:
+    """ServeEngine's admission/retire bookkeeping with the device removed —
+    the object handed to the REAL ``Scheduler.admit``."""
+
+    def __init__(self, layout: PagedLayout, n_slots: int, buggy: str | None = None) -> None:
+        self.layout = layout
+        self.n_slots = n_slots
+        self.pool = PagePool(layout, n_slots)
+        self.slots: dict[int, _SlotRT] = {}
+        self.buggy = buggy
+
+    @property
+    def has_active(self) -> bool:
+        return bool(self.slots)
+
+    @property
+    def free_slots(self) -> list[int]:
+        return [b for b in range(self.n_slots) if b not in self.slots]
+
+    def admissible(self, prompt_len: int, max_gen: int) -> bool:
+        return prompt_len >= 1 and max_gen >= 1 and self.pool.fits(prompt_len, max_gen)
+
+    def can_admit_now(self, prompt_len: int, max_gen: int) -> bool:
+        if not self.admissible(prompt_len, max_gen) or not self.free_slots:
+            return False
+        return self.pool.can_reserve(prompt_len, max_gen)
+
+    def admit(self, rid: int, prompt: np.ndarray, max_gen: int) -> tuple[int, tuple | None]:
+        b = self.free_slots[0]
+        L = int(prompt.shape[0])
+        self.pool.reserve_or_fail(b, L, max_gen)
+        self.pool.allocate_prefix(b, L)
+        if max_gen <= 1:  # retires at admission, like ServeEngine.admit
+            self._retire(b)
+            return b, (rid, [0])
+        self.slots[b] = _SlotRT(rid=rid, pos=L, generated=1, max_gen=max_gen)
+        return b, None
+
+    def tick(self) -> list[tuple]:
+        finished = []
+        for b in sorted(self.slots):
+            st = self.slots[b]
+            self.pool.ensure(b, st.pos)  # allocate-on-write for this tick's K/V
+            st.pos += 1
+            st.generated += 1
+            if st.eos or st.generated >= st.max_gen:
+                del self.slots[b]
+                self._retire(b)
+                finished.append((st.rid, st.generated))
+        return finished
+
+    def reset(self) -> None:
+        """Mirror ``ServeEngine.reset``: audit the outgoing pool's accounting
+        (``check_leak_free``), then rebuild it and free every slot."""
+        self.pool.check_leak_free()
+        self.pool = PagePool(self.layout, self.n_slots)
+        self.slots = {}
+
+    def _retire(self, b: int) -> None:
+        if self.buggy != "drop-release":
+            self.pool.release(b)
+
+    def fingerprint(self) -> tuple:
+        return (
+            self.pool.fingerprint(),
+            tuple(
+                (b, st.pos, st.generated, st.max_gen, st.eos)
+                for b, st in sorted(self.slots.items())
+            ),
+        )
+
+
+@dataclasses.dataclass
+class ServeState:
+    sched: Scheduler
+    engine: _ModelEngine
+    submits_left: int
+    resets_left: int
+    next_rid: int = 0  # bookkeeping only — excluded from the fingerprint
+
+
+class ServeModel:
+    """Bounded model of submit -> admit -> tick -> retire over the real pool
+    and scheduler.
+
+    ``buggy="drop-release"`` seeds the known-bad variant for the CLI
+    selftest: retirement forgets ``PagePool.release``, so a finished slot
+    keeps its reservation and pages — caught by the stale-occupancy
+    invariant (and, once the pool is starved dry, by deadlock detection).
+    """
+
+    def __init__(
+        self,
+        page_size: int = 2,
+        n_pages: int = 4,
+        n_slots: int = 2,
+        shapes=_DEFAULT_SHAPES,
+        submits: int = 3,
+        resets: int = 1,
+        buggy: str | None = None,
+    ) -> None:
+        if buggy not in (None, "drop-release"):
+            raise ValueError(f"unknown buggy variant {buggy!r}")
+        self.layout = PagedLayout(page_size=page_size, n_pages=n_pages)
+        self.n_slots = n_slots
+        self.shapes = tuple(shapes)
+        self.submits = submits
+        self.resets = resets
+        self.buggy = buggy
+        for L, G in self.shapes:
+            if not self.layout.pages_for(L + G - 1) <= min(n_pages, self.layout.pages_per_slot):
+                raise ValueError(f"shape ({L}, {G}) can never be admitted — bad model config")
+
+    # -- model interface -----------------------------------------------------
+
+    def initial(self) -> ServeState:
+        return ServeState(
+            sched=Scheduler(SchedulerConfig(max_waiting_prefill=1, continuous=True)),
+            engine=_ModelEngine(self.layout, self.n_slots, buggy=self.buggy),
+            submits_left=self.submits,
+            resets_left=self.resets,
+        )
+
+    def actions(self, s: ServeState) -> list[str]:
+        acts: list[str] = []
+        if s.submits_left > 0:
+            for L, G in self.shapes:
+                acts.append(f"submit:{L}x{G}")
+        if s.sched.queue:
+            head = s.sched.queue[0]
+            # enabled only when the real admit would make progress — a
+            # blocked head with nothing ticking is then a detectable deadlock
+            if s.engine.can_admit_now(int(head.prompt.shape[0]), head.max_gen):
+                acts.append("admit")
+        if s.engine.has_active:
+            acts.append("tick")
+            for b, st in sorted(s.engine.slots.items()):
+                if st.generated + 1 < st.max_gen:  # EOS before the natural retire tick
+                    acts.append(f"eos:{b}")
+        if s.resets_left > 0:
+            acts.append("reset")
+        return sorted(acts)
+
+    def apply(self, state: ServeState, action: str) -> ServeState:
+        s = copy.deepcopy(state)
+        kind, _, spec = action.partition(":")
+        if kind == "submit":
+            left, _, right = spec.partition("x")
+            L, G = int(left), int(right)
+            s.sched.submit(Request(rid=s.next_rid, prompt=np.zeros(L, np.int32), max_gen=G))
+            s.next_rid += 1
+            s.submits_left -= 1
+        elif kind == "admit":
+            s.sched.admit(s.engine, now=0.0)
+        elif kind == "tick":
+            s.engine.tick()
+        elif kind == "eos":
+            s.engine.slots[int(spec)].eos = True
+        elif kind == "reset":
+            s.engine.reset()
+            s.resets_left -= 1
+        else:
+            raise ValueError(f"unknown action {action!r}")
+        return s
+
+    def fingerprint(self, s: ServeState) -> tuple:
+        return (
+            s.sched.fingerprint(),
+            s.engine.fingerprint(),
+            s.submits_left,
+            s.resets_left,
+        )
+
+    def invariants(self, s: ServeState) -> list[str]:
+        msgs: list[str] = []
+        pool = s.engine.pool
+        try:
+            pool.check_leak_free()
+        except RuntimeError as e:
+            msgs.append(str(e))
+        strand_need = 0
+        for b in range(self.n_slots):
+            reserved = int(pool._reserved[b])
+            allocated = int(pool._allocated[b])
+            pages = pool.slot_pages(b)
+            st = s.engine.slots.get(b)
+            if st is None:
+                if pages or reserved or allocated:
+                    msgs.append(
+                        f"slot {b} has no active request but holds pages={pages} "
+                        f"reserved={reserved} allocated={allocated} — retirement "
+                        "leaked its reservation (missing release?)"
+                    )
+                continue
+            if reserved <= 0:
+                msgs.append(f"active slot {b} has no reservation — admission was not gated")
+            if allocated != self.layout.pages_for(st.pos) or allocated != len(pages):
+                msgs.append(
+                    f"slot {b} accounting drift: pos={st.pos} expects "
+                    f"{self.layout.pages_for(st.pos)} pages, allocated={allocated}, "
+                    f"table holds {len(pages)}"
+                )
+            strand_need += max(reserved - allocated, 0)
+        if strand_need > pool.free_pages:
+            msgs.append(
+                f"reservation not covered: active slots still need {strand_need} "
+                f"page(s) but only {pool.free_pages} are free — an admitted "
+                "request can be stranded mid-generation"
+            )
+        return msgs
+
+    def quiescent(self, s: ServeState) -> bool:
+        # remaining submit/reset budget is an option, not an obligation — a
+        # run is complete once the queue drained and every slot retired
+        return not s.sched.queue and not s.engine.has_active

@@ -138,15 +138,18 @@ def loop_aware_collective_bytes(hlo_text: str, trips: list[int]) -> dict:
     return {"by_depth_bytes": by_depth, "weighted_bytes": weighted, "trips": trips}
 
 
-def _analysis_crosscheck(plan, mesh, rec: dict) -> dict:
+def _analysis_crosscheck(plan, mesh, rec: dict, warn_ratio: float = 2.0) -> dict:
     """Cross-check ``repro.analysis``'s jaxpr cost model against XLA.
 
     The analyzer estimates from the GLOBAL pre-SPMD trace; dividing by device
     count approximates the per-device share that ``cost_analysis`` reports.
-    Both count loop bodies once, so the figures are comparable; a >2x gap in
-    either direction flags estimate drift (in the cost model or in what XLA
-    fuses away) without failing the cell.
+    Both count loop bodies once, so the figures are comparable; a gap beyond
+    ``warn_ratio``x in either direction (``--cost-warn-ratio``, default 2x)
+    flags estimate drift (in the cost model or in what XLA fuses away)
+    without failing the cell.
     """
+    if warn_ratio <= 1.0:
+        raise ValueError(f"warn_ratio must be > 1 (got {warn_ratio}): it bounds both directions")
     try:
         from repro.analysis.costmodel import estimate_cost, per_device
 
@@ -165,10 +168,10 @@ def _analysis_crosscheck(plan, mesh, rec: dict) -> dict:
         if hlo_flops > 0 and est_flops > 0:
             ratio = est_flops / hlo_flops
             out["analysis_flops_ratio"] = round(ratio, 3)
-            if ratio > 2.0 or ratio < 0.5:
+            if ratio > warn_ratio or ratio < 1.0 / warn_ratio:
                 out["analysis_flops_warn"] = True
                 print(
-                    f"[WARN] analysis/XLA flops disagree {ratio:.2f}x "
+                    f"[WARN] analysis/XLA flops disagree {ratio:.2f}x (warn at {warn_ratio:g}x) "
                     f"({est_flops:.3e} vs {hlo_flops:.3e} per dev) — cost model drift?",
                     flush=True,
                 )
@@ -177,7 +180,9 @@ def _analysis_crosscheck(plan, mesh, rec: dict) -> dict:
         return {"analysis_crosscheck_error": f"{type(e).__name__}: {e}"}
 
 
-def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, hetero: bool) -> dict:
+def run_cell(
+    arch: str, shape_name: str, mesh, mesh_name: str, hetero: bool, cost_warn_ratio: float = 2.0
+) -> dict:
     rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "hetero": hetero}
     reason = skip_reason(arch, shape_name)
     if reason:
@@ -223,7 +228,7 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, hetero: bool) -> 
             collectives=colls,
             collective_bytes_per_dev=int(sum(s["bytes"] for s in colls.values())),
         )
-        rec.update(_analysis_crosscheck(plan, mesh, rec))
+        rec.update(_analysis_crosscheck(plan, mesh, rec, warn_ratio=cost_warn_ratio))
     except Exception as e:  # noqa: BLE001 — a failed cell is a bug; record it
         rec.update(
             status="error",
@@ -256,6 +261,7 @@ def _run_isolated(args) -> None:
                     sys.executable, "-m", "repro.launch.dryrun",
                     "--arch", arch, "--shape", shape_name, "--mesh", mesh_name,
                     "--out", cell_out,
+                    "--cost-warn-ratio", str(args.cost_warn_ratio),
                 ] + (["--hetero"] if args.hetero else [])
                 proc = subprocess.run(cmd, capture_output=True, text=True, timeout=1800)
                 sys.stdout.write(proc.stdout)
@@ -299,12 +305,21 @@ def main() -> None:
     ap.add_argument("--hetero", action="store_true", help="lower the while-mode hetero step with W_max headroom")
     ap.add_argument("--out", default="results/dryrun.json")
     ap.add_argument(
+        "--cost-warn-ratio",
+        type=float,
+        default=2.0,
+        help="warn when the analyzer/XLA flops ratio leaves [1/R, R] (default 2.0; "
+        "tighten to catch smaller cost-model drift, loosen for exotic fusions)",
+    )
+    ap.add_argument(
         "--isolate",
         action="store_true",
         help="run each cell in a subprocess (an XLA C++ CHECK failure in one cell "
         "then records as FAIL instead of killing the sweep)",
     )
     args = ap.parse_args()
+    if args.cost_warn_ratio <= 1.0:
+        ap.error(f"--cost-warn-ratio must be > 1 (got {args.cost_warn_ratio}): bounds both directions")
 
     if args.isolate:
         return _run_isolated(args)
@@ -325,7 +340,10 @@ def main() -> None:
             # iterate every assigned shape; skips are recorded with reasons
             shapes = [args.shape] if args.shape else list(SHAPES)
             for shape_name in shapes:
-                rec = run_cell(arch, shape_name, mesh, mesh_name, args.hetero)
+                rec = run_cell(
+                    arch, shape_name, mesh, mesh_name, args.hetero,
+                    cost_warn_ratio=args.cost_warn_ratio,
+                )
                 records.append(rec)
                 if rec["status"] == "ok":
                     print(

@@ -94,6 +94,18 @@ class FailureDetector:
     def alive(self) -> np.ndarray:
         return self._alive.copy()
 
+    def fingerprint(self) -> tuple:
+        """Canonical hashable state — the protocol model checker's identity
+        for this detector (``repro.analysis.protocol``).  Covers everything
+        that affects future behavior: patience, per-worker miss counts,
+        aliveness, and the current interval's heartbeat set."""
+        return (
+            self.patience,
+            tuple(int(m) for m in self._missed),
+            tuple(bool(a) for a in self._alive),
+            tuple(bool(s) for s in self._seen),
+        )
+
 
 @dataclasses.dataclass(frozen=True)
 class RescalePlan:

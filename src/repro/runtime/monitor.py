@@ -212,3 +212,17 @@ class StragglerMonitor:
             return 0.0
         t = self._hist[-1]
         return float((t.max() - t.min()) / max(t.max(), 1e-12))
+
+    def fingerprint(self) -> tuple:
+        """Canonical hashable state for the protocol model checker
+        (``repro.analysis.protocol``): shape parameters plus the rolling
+        observation/baseline windows.  The elastic harness uses it to prove
+        the monitor is rebuilt for the post-rescale membership (a stale
+        monitor z-scores the wrong workers)."""
+        return (
+            self.n_workers,
+            self.window,
+            self.z_threshold,
+            tuple(tuple(round(float(x), 9) for x in h) for h in self._hist),
+            tuple(tuple(round(float(x), 9) for x in b) for b in self._base),
+        )

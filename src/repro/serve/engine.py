@@ -212,6 +212,10 @@ class ServeEngine:
         self.slots = [_Slot() for _ in range(self.n_slots)]
         self.cache = init_cache(self.cfg, self.n_slots, self.max_seq, per_slot=True, paged=self.layout)
         if self.pool is not None:
+            # the outgoing run's accounting must balance before it is thrown
+            # away — every A/B bench reset() is a leak audit of the run that
+            # just finished (aborted runs still pass: held-by-one-slot is fine)
+            self.pool.check_leak_free()
             self.pool = PagePool(self.layout, self.n_slots)
         self.last_tok = jnp.zeros((self.n_slots,), jnp.int32)
         self._key = jax.random.PRNGKey(self._seed + 1)

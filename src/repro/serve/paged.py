@@ -111,9 +111,24 @@ class PagePool:
         self.dirty = True
 
     def release(self, slot: int) -> None:
-        """Whole-table free: return every page and the reservation."""
+        """Whole-table free: return every page and the reservation.
+
+        A slot with neither a reservation nor pages has nothing to return —
+        releasing it again is a stale caller (double release).  Silently
+        accepting it used to be harmless only by luck: if the slot had been
+        re-admitted in between, the stale release would hand the NEW
+        occupant's pages back to the free list while the occupant still
+        writes them — double-owned pages and a corrupt LIFO free list.  Fail
+        loudly at the first double release instead.
+        """
         row = self.table[slot]
         pages = [int(p) for p in row if p >= 0]
+        if not pages and not self._reserved[slot]:
+            raise RuntimeError(
+                f"double release of slot {slot}: no reservation or pages outstanding "
+                "— a stale caller releasing a re-admitted slot would free the new "
+                "occupant's pages"
+            )
         self._free.extend(reversed(pages))  # LIFO: most recent pages reused first
         row[:] = -1
         self._reserved[slot] = 0
@@ -127,12 +142,31 @@ class PagePool:
         return [int(p) for p in self.table[slot] if p >= 0]
 
     def check_leak_free(self) -> None:
-        """Every page is either free or in exactly one table row."""
+        """Every page is either free or in exactly one table row.
+
+        Raises ``RuntimeError`` (not ``assert`` — the check must survive
+        ``python -O``) naming the held/free sets on violation.  The protocol
+        model checker runs this on every reachable state; ``ServeEngine``
+        runs it on every ``reset()`` so A/B bench runs assert it between
+        workloads.
+        """
         held = [int(p) for p in self.table.ravel() if p >= 0]
         seen = held + self._free
-        assert len(seen) == len(set(seen)) == self.layout.n_pages, (
-            sorted(held),
-            sorted(self._free),
+        if not (len(seen) == len(set(seen)) == self.layout.n_pages):
+            raise RuntimeError(
+                f"page accounting broken: held={sorted(held)} free={sorted(self._free)} "
+                f"should partition 0..{self.layout.n_pages - 1}"
+            )
+
+    def fingerprint(self) -> tuple:
+        """Canonical hashable state for the protocol model checker: the page
+        table, the exact free-list ORDER (LIFO determinism is part of the
+        contract), and the reservation/allocation accounting."""
+        return (
+            tuple(tuple(int(p) for p in row) for row in self.table),
+            tuple(self._free),
+            tuple(int(r) for r in self._reserved),
+            tuple(int(a) for a in self._allocated),
         )
 
     def metrics(self) -> dict:

@@ -69,6 +69,17 @@ class Scheduler:
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
+    def fingerprint(self) -> tuple:
+        """Canonical hashable state for the protocol model checker: the
+        admission policy plus the FIFO queue as (prompt_len, max_gen) shapes
+        — request ids are bookkeeping, not behavior, so they stay out (two
+        queues of identical shapes must merge in the state graph)."""
+        return (
+            self.config.max_waiting_prefill,
+            self.config.continuous,
+            tuple((int(r.prompt.shape[0]), int(r.max_gen)) for r in self.queue),
+        )
+
     def admit(self, engine, now: float) -> list[tuple]:
         """Admit FIFO-ordered requests into free slots; returns [(rid, tokens)]
         for requests that finished already at admission.

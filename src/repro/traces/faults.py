@@ -349,6 +349,14 @@ class FaultInjector:
         self._slow = kept
         self.n_workers = len(survivors) + n_new
 
+    def fingerprint(self) -> tuple:
+        """Canonical hashable state for the protocol model checker
+        (``repro.analysis.protocol``): worker count plus every live window,
+        order-free (windows are commutative multipliers)."""
+        slow = tuple(sorted((w["worker"], w["scale"], w["from"], w["until"]) for w in self._slow))
+        net = tuple(sorted((w["scale"], w["from"], w["until"]) for w in self._net))
+        return (self.n_workers, slow, net)
+
     # checkpoint support (bundled into the driver's metadata) ---------------
 
     def state_dict(self) -> dict:

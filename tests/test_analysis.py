@@ -372,3 +372,82 @@ def test_selftest_passes_on_healthy_checker():
     assert not _errors(findings)
     assert meta["deadlock_verdict"] == "divergent"
     assert meta["pragma_suppressed"] == 1
+
+
+# ---------------------------------------------------------------------------
+# pragma accounting: used-site collection, stale waivers, per-pragma counts
+# ---------------------------------------------------------------------------
+
+
+def _pragma_file(tmp_path, name, lines):
+    p = tmp_path / name
+    p.write_text("\n".join(lines) + "\n")
+    return str(p)
+
+
+def test_apply_pragmas_collects_used_sites(tmp_path):
+    from repro.analysis.findings import apply_pragmas
+
+    src = _pragma_file(tmp_path, "mod.py", ["x = 1  # analysis: ignore[my-rule]"])
+    used = set()
+    out = apply_pragmas(
+        [
+            Finding(rule="my-rule", severity="error", target="t", path="p", message="m", src=f"{src}:1"),
+            Finding(rule="other-rule", severity="error", target="t", path="p", message="m", src=f"{src}:1"),
+        ],
+        used=used,
+    )
+    assert [f.suppressed for f in out] == [True, False]  # rule must match the waiver
+    assert used == {(src, 1, "my-rule")}
+
+
+def test_scan_and_stale_pragma_findings(tmp_path):
+    from repro.analysis.findings import scan_pragmas, stale_pragma_findings
+
+    a = _pragma_file(tmp_path, "a.py", ["x = 1  # analysis: ignore[rule-one]", "y = 2"])
+    b = _pragma_file(tmp_path, "b.py", ["z = 3  # analysis: ignore[rule-two, rule-three]"])
+    assert scan_pragmas(str(tmp_path)) == [  # sorted triples
+        (a, 1, "rule-one"),
+        (b, 1, "rule-three"),
+        (b, 1, "rule-two"),
+    ]
+    # rule-one was consumed this run; the b.py waivers suppressed nothing
+    stale = stale_pragma_findings({(a, 1, "rule-one")}, str(tmp_path))
+    assert [(f.rule, f.severity) for f in stale] == [("stale-pragma", "warning")] * 2
+    assert {f.path for f in stale} == {f"{b}:1"}
+    assert all("suppressed nothing" in f.message for f in stale)
+
+
+def test_build_report_counts_suppressions_per_pragma_and_flags_stale(tmp_path):
+    src = _pragma_file(
+        tmp_path, "mod.py",
+        ["a()  # analysis: ignore[waived-rule]", "b()  # analysis: ignore[dead-rule]"],
+    )
+    findings = [
+        Finding(rule="waived-rule", severity="error", target="t", path=f"p{i}", message="m",
+                src=f"{src}:1")
+        for i in range(2)
+    ]
+    report = build_report(findings, {"x": 1}, pragma_scan_root=str(tmp_path))
+    # both findings suppressed by the same pragma site -> counted against it
+    assert report["summary"]["n_error"] == 0 and report["summary"]["n_suppressed"] == 2
+    assert report["summary"]["by_pragma"] == {f"{src}:1[waived-rule]": 2}
+    # the waiver that suppressed nothing is flagged, the used one is not
+    stale = [f for f in report["findings"] if f["rule"] == "stale-pragma"]
+    assert len(stale) == 1 and stale[0]["path"] == f"{src}:2" and "dead-rule" in stale[0]["message"]
+
+
+def test_stale_pragma_only_on_full_runs():
+    """The stale audit is gated on a full-target invocation: a partial run
+    never generates the findings a waiver exists for."""
+    from repro.analysis.cli import TARGETS, _pragma_scan_root
+
+    assert _pragma_scan_root(["protocol"]) is None
+    assert _pragma_scan_root(["train", "serve"]) is None
+    root = _pragma_scan_root(list(TARGETS))
+    assert root is not None and root.endswith("repro")
+    # the one in-tree pragma (the selftest fixture waiver) must be consumed
+    # by every run — scan must see it so an unconsumed copy would be flagged
+    from repro.analysis.findings import scan_pragmas
+
+    assert any(r == "divergent-collective" for _, _, r in scan_pragmas(root))

@@ -116,6 +116,35 @@ def test_page_pool_exhaustion_and_guards():
         pool.ensure(0, 12)  # position 12 -> 4th page, past the 3-page reservation
 
 
+def test_page_pool_double_release_raises():
+    """A second release of a drained slot is a stale caller — it must fail
+    loudly instead of silently corrupting a future occupant's free list."""
+    pool = PagePool(PagedLayout(page_size=4, n_pages=8), n_slots=2)
+    pool.reserve_or_fail(0, 5, 4)
+    pool.allocate_prefix(0, 5)
+    pool.release(0)
+    with pytest.raises(RuntimeError, match="double release"):
+        pool.release(0)
+    # a reserved-but-never-written slot still has something to return: its
+    # reservation.  Releasing it once is legal, twice is not.
+    pool.reserve_or_fail(1, 5, 4)
+    pool.release(1)
+    with pytest.raises(RuntimeError, match="double release"):
+        pool.release(1)
+    pool.check_leak_free()
+
+
+def test_check_leak_free_raises_not_asserts():
+    """The leak audit must survive ``python -O``: a RuntimeError naming the
+    broken partition, not a bare assert."""
+    pool = PagePool(PagedLayout(page_size=4, n_pages=4), n_slots=2)
+    pool.reserve_or_fail(0, 4, 1)
+    pool.allocate_prefix(0, 4)
+    pool.table[1, 0] = int(pool.table[0, 0])  # corrupt: page now double-owned
+    with pytest.raises(RuntimeError, match="page accounting broken"):
+        pool.check_leak_free()
+
+
 def test_paged_layout_validation():
     with pytest.raises(ValueError):
         PagedLayout(page_size=0)
@@ -316,6 +345,23 @@ def test_paged_reset_keeps_jit_caches(smollm):
     req2 = Request(rid=0, prompt=req.prompt, max_gen=5)
     serve_loop(eng, [req2], SchedulerConfig())
     assert req2.output == req.output
+
+
+def test_reset_audits_pool_accounting(smollm):
+    """reset() runs the leak audit on the outgoing pool: a clean run (even
+    one aborted mid-flight) resets fine; corrupted accounting refuses."""
+    cfg, params = smollm
+    eng = ServeEngine(cfg, params, n_slots=2, max_seq=48, attn_impl="paged", page_size=4)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+    eng.admit(0, prompt, max_gen=8)
+    eng.tick()
+    eng.reset()  # mid-flight abort: pages held by one slot — still a clean partition
+    assert eng.pool.free_pages == eng.layout.n_pages and not eng.has_active
+    eng.admit(1, prompt, max_gen=8)
+    eng.pool.table[1, 0] = int(eng.pool.table[0, 0])  # double-own a page
+    with pytest.raises(RuntimeError, match="page accounting broken"):
+        eng.reset()
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,77 @@
+"""Seeded random-walk fuzzing of the protocol harnesses (slow lane).
+
+The BFS in ``repro.analysis.protocol`` is exhaustive but depth-bounded;
+these walks drive the SAME real classes and the SAME invariants hundreds of
+actions deep along random schedules — interleavings far past the CLI's
+documented depth bounds.  Seeds are fixed, so a failure is reproducible and
+its trail prints as a replayable ``kind@step:spec`` script.
+"""
+
+import random
+
+import pytest
+
+from repro.analysis.protocol import ElasticModel, ServeModel, format_script
+
+pytestmark = pytest.mark.slow
+
+
+def _walk(model, seed: int, steps: int):
+    """Random walk checking invariants after EVERY action; returns
+    (violation message or None, trail).  A stuck non-quiescent state counts
+    as a deadlock violation."""
+    rng = random.Random(seed)
+    s = model.initial()
+    trail = []
+    for _ in range(steps):
+        acts = model.actions(s)
+        if not acts:
+            if model.quiescent(s):
+                break
+            return f"deadlock: no enabled action after {len(trail)} steps", trail
+        a = rng.choice(acts)
+        trail.append(a)
+        try:
+            s = model.apply(s, a)
+        except Exception as e:  # noqa: BLE001 — an action crash is a finding
+            return f"action {a!r} raised {type(e).__name__}: {e}", trail
+        msgs = model.invariants(s)
+        if msgs:
+            return msgs[0], trail
+    return None, trail
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_elastic_random_walks_stay_invariant(seed):
+    # generous budgets: the fleet churns through many consecutive rescales,
+    # checkpoints, and resumes — way past the BFS depth bound of 7
+    model = ElasticModel(adds=4, slows=3, ckpts=3, resumes=3)
+    bad, trail = _walk(model, seed, steps=250)
+    assert bad is None, f"{bad}\nscript: {format_script(trail)}"
+    assert len(trail) == 250  # heartbeats/ticks never run dry
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_serve_random_walks_stay_invariant(seed):
+    model = ServeModel(submits=12, resets=3)
+    bad, trail = _walk(model, seed, steps=250)
+    assert bad is None, f"{bad}\nscript: {format_script(trail)}"
+    assert len(trail) >= 12  # at least every submit happened before quiescence
+
+
+def test_fuzzer_has_teeth_on_drop_release():
+    """The same walk harness must catch the seeded serve bug almost
+    immediately (first retirement leaks)."""
+    bad, trail = _walk(ServeModel(buggy="drop-release"), seed=0, steps=250)
+    assert bad is not None and "leak" in bad
+
+
+def test_fuzzer_has_teeth_on_remap_identity():
+    """At least one seed's walk must trip the elastic remap bug (needs a
+    non-prefix survivor set — a middle worker dying)."""
+    for seed in range(10):
+        bad, _ = _walk(ElasticModel(buggy="remap-identity"), seed=seed, steps=250)
+        if bad is not None:
+            assert "mapped to the wrong workers" in bad or "mismatch" in bad or "lost" in bad
+            return
+    pytest.fail("no walk tripped the seeded remap bug within 10 seeds x 250 steps")
