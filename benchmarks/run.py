@@ -378,6 +378,118 @@ def run_decode_perf_scenario(json_out: str | None, smoke: bool = False) -> dict:
     return bench
 
 
+def run_latency_scenario(json_out: str | None, smoke: bool = False) -> dict:
+    """Latency percentiles (p50/p90/p99 TTFT + per-token) on a bursty trace:
+    continuous-vs-static admission and paged-vs-dense KV, same requests.
+
+    Time is MODELED: each tick costs ``base + work_frac * attended /
+    (n_slots * max_seq)`` modeled seconds, normalized so a dense tick is
+    exactly 1.0 (dense always attends the full cache) and paged ticks are
+    cheaper in proportion to live tokens — the same analytic accounting as
+    ``decode-perf``, applied to the clock instead of FLOPs.  Every number
+    derives from the seeded trace + the model, so the BENCH json is
+    bit-identical across reruns and CI double-runs + cmp's it."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs import smoke_config
+    from repro.models import init_params
+    from repro.obs import MetricsRegistry, ServeObs
+    from repro.serve import SchedulerConfig, ServeEngine, serve_loop
+    from repro.traces import bundled_trace, to_requests
+
+    trace = bundled_trace("pai_small")
+    n_requests = 16 if smoke else 48
+    time_scale = 0.35  # compress the trace's bursts so 4 slots saturate
+    n_slots, page_size = 4, 4
+    tasks = trace.tasks[:n_requests]
+    max_seq = max(t.prompt_len + t.gen_len for t in tasks)
+    cfg = smoke_config("smollm-360m", seq=max_seq + 16)
+    cfg = dataclasses.replace(cfg, param_dtype="float32", compute_dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    dense_work = n_slots * max_seq  # what a dense tick always attends
+
+    def tick_cost(engine) -> float:
+        return 0.25 + 0.75 * engine.last_tick_attended / dense_work
+
+    engines = {
+        "dense": ServeEngine(cfg, params, n_slots=n_slots, max_seq=max_seq, seed=0),
+        "paged": ServeEngine(
+            cfg, params, n_slots=n_slots, max_seq=max_seq, seed=0,
+            attn_impl="paged", page_size=page_size,
+        ),
+    }
+    runs = {}
+    for name, kv, continuous in [
+        ("continuous_dense", "dense", True),
+        ("static_dense", "dense", False),
+        ("continuous_paged", "paged", True),
+    ]:
+        eng = engines[kv]
+        eng.reset()
+        reqs = to_requests(
+            trace, vocab_size=cfg.vocab_size, seed=0, time_scale=time_scale, limit=n_requests
+        )
+        obs = ServeObs(metrics=MetricsRegistry())
+        summary = serve_loop(
+            eng, reqs, SchedulerConfig(max_waiting_prefill=2, continuous=continuous),
+            obs=obs, tick_cost=tick_cost,
+        )
+        snap = obs.metrics.snapshot()
+
+        def pcts(hist_name: str) -> dict | None:
+            h = snap["histograms"].get(hist_name)
+            if h is None:
+                return None
+            return {q: h[q] for q in ("p50", "p90", "p99")} | {"count": h["count"]}
+
+        runs[name] = {
+            "kv": kv,
+            "continuous": continuous,
+            "completed": snap["counters"].get("serve.completed", 0),
+            "ticks": summary["ticks"],
+            "makespan_modeled": round(summary["ticks_elapsed"], 6),
+            "slot_utilization": summary["slot_utilization"],
+            "defers": {
+                k.rsplit(".", 1)[1]: v
+                for k, v in snap["counters"].items()
+                if k.startswith("serve.defers.")
+            },
+            "ttft": pcts("serve.ttft"),
+            "per_token": pcts("serve.per_token"),
+            "e2e_latency": pcts("serve.e2e_latency"),
+        }
+
+    bench = {
+        "scenario": "latency",
+        "arch": cfg.name,
+        "trace": trace.name,
+        "requests": n_requests,
+        "n_slots": n_slots,
+        "max_seq": max_seq,
+        "page_size": page_size,
+        "time_scale": time_scale,
+        "tick_model": "0.25 + 0.75 * attended / (n_slots * max_seq)",
+        "runs": runs,
+        "continuous_ttft_p99_speedup": round(
+            runs["static_dense"]["ttft"]["p99"] / max(runs["continuous_dense"]["ttft"]["p99"], 1e-9), 3
+        ),
+        "paged_per_token_p50_speedup": round(
+            runs["continuous_dense"]["per_token"]["p50"]
+            / max(runs["continuous_paged"]["per_token"]["p50"], 1e-9),
+            3,
+        ),
+    }
+    print("BENCH " + json.dumps(bench))
+    if json_out:
+        os.makedirs(os.path.dirname(json_out) or ".", exist_ok=True)
+        with open(json_out, "w") as f:
+            json.dump(bench, f, indent=1)
+    return bench
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="run benches whose name contains this")
@@ -385,12 +497,17 @@ def main() -> None:
     ap.add_argument(
         "--scenario",
         default=None,
-        choices=["elastic", "serve", "decode-perf", "faults"],
+        choices=["elastic", "serve", "decode-perf", "faults", "latency"],
         help="run one end-to-end scenario (emits a BENCH json line) instead of the CSV benches",
     )
     ap.add_argument("--smoke", action="store_true", help="shrink the scenario workload (CI)")
     ap.add_argument("--json-out", default=None, help="scenario json path (default results/bench_<scenario>.json)")
     ap.add_argument("--campaign-seed", type=int, default=0, help="base seed for --scenario faults sweeps")
+    ap.add_argument(
+        "--metrics-out",
+        default=None,
+        help="CSV benches only: also write the rows as a repro.obs.metrics/v1 snapshot json",
+    )
     args = ap.parse_args()
 
     if args.scenario == "faults":
@@ -411,6 +528,10 @@ def main() -> None:
         )
         run_decode_perf_scenario(out, smoke=args.smoke)
         return
+    if args.scenario == "latency":
+        out = args.json_out or os.path.join(os.path.dirname(__file__), "..", "results", "bench_latency.json")
+        run_latency_scenario(out, smoke=args.smoke)
+        return
 
     from benchmarks import bench_kernels, paper_figs
 
@@ -419,6 +540,7 @@ def main() -> None:
         benches += paper_figs.ALL
     benches += bench_kernels.ALL
 
+    all_rows: list[tuple] = []
     print("name,us_per_call,derived")
     for bench in benches:
         if args.only and args.only not in bench.__name__:
@@ -430,12 +552,22 @@ def main() -> None:
             rows = [(bench.__name__, (time.time() - t0) * 1e6, f"ERROR {type(e).__name__}: {e}")]
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")
+        all_rows += rows
         sys.stdout.flush()
 
     for name, us, derived in _roofline_rows():
         if args.only and args.only not in name:
             continue
         print(f"{name},{us:.1f},{derived}")
+        all_rows.append((name, us, derived))
+
+    if args.metrics_out:
+        from repro.obs import bench_rows_snapshot
+
+        os.makedirs(os.path.dirname(args.metrics_out) or ".", exist_ok=True)
+        with open(args.metrics_out, "w") as f:
+            json.dump(bench_rows_snapshot(all_rows), f, sort_keys=True, indent=1)
+            f.write("\n")
 
 
 if __name__ == "__main__":

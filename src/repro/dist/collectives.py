@@ -34,6 +34,7 @@ from jax.sharding import PartitionSpec
 
 __all__ = [
     "ring_allreduce",
+    "ring_allreduce_bytes",
     "ring_allreduce_tree",
     "ring_all_gather",
     "ring_reduce_scatter",
@@ -84,6 +85,20 @@ def ring_allreduce(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
 
     chunks = jax.lax.fori_loop(0, n - 1, ag_step, chunks)
     return chunks.reshape(-1)[:size].reshape(shape).astype(dtype)
+
+
+def ring_allreduce_bytes(payload_bytes: int, n_workers: int) -> int:
+    """Bytes one worker sends per ring allreduce of a ``payload_bytes`` tree.
+
+    The bandwidth-optimal ring moves ``2 * (n-1)/n`` of the payload through
+    each link (reduce-scatter + all-gather, ``(n-1)/n`` each); gathered FSDP
+    moves the same total as one param all-gather plus one grad
+    reduce-scatter.  This is the analytic figure the roofline bench counts
+    and the obs layer reports as ``train.collective_bytes``.
+    """
+    if n_workers <= 1:
+        return 0
+    return int(2 * (n_workers - 1) * payload_bytes // n_workers)
 
 
 def ring_allreduce_tree(tree: Any, axis_name: str) -> Any:

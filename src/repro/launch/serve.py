@@ -86,6 +86,8 @@ def main(argv=None) -> dict:
     ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", default=None)
+    ap.add_argument("--trace-out", default=None, help="write a Perfetto trace-event JSON (see README Observability)")
+    ap.add_argument("--metrics-out", default=None, help="write a metrics snapshot JSON (repro.obs.metrics/v1)")
     args = ap.parse_args(argv)
 
     trace = None
@@ -159,10 +161,16 @@ def main(argv=None) -> dict:
             seed=args.seed,
         )
         requests = synthesize(wl, embed_dim=embed_dim)
+    obs = None
+    if args.trace_out or args.metrics_out:
+        from repro.obs import ServeObs
+
+        obs = ServeObs(trace_out=args.trace_out, metrics_out=args.metrics_out)
     summary = serve_loop(
         engine,
         requests,
         SchedulerConfig(max_waiting_prefill=args.max_prefills_per_tick, continuous=not args.static),
+        obs=obs,
     )
     result = {
         "arch": cfg.name,
@@ -177,6 +185,15 @@ def main(argv=None) -> dict:
     if engine.pool is not None:
         result["pool"] = engine.pool.metrics()
         result["attended_key_tokens"] = engine.attended_key_tokens
+    if obs is not None:
+        obs.close()
+        if obs.metrics is not None:
+            snap = obs.metrics.snapshot()
+            result["latency"] = {
+                name.split(".", 1)[1]: {q: h[q] for q in ("p50", "p90", "p99")}
+                for name, h in snap["histograms"].items()
+                if name in ("serve.ttft", "serve.per_token", "serve.e2e_latency")
+            }
     print(json.dumps(result, indent=1))
     if args.json_out:
         with open(args.json_out, "w") as f:

@@ -96,6 +96,8 @@ def parse_args(argv=None):
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", default=None)
+    ap.add_argument("--trace-out", default=None, help="write a Perfetto trace-event JSON (see README Observability)")
+    ap.add_argument("--metrics-out", default=None, help="write a metrics snapshot JSON (repro.obs.metrics/v1)")
     args = ap.parse_args(argv)
     if args.policy == "static" and not args.static_ratio:
         ap.error("--policy static requires --static-ratio (e.g. --static-ratio 6,4); "
@@ -168,6 +170,8 @@ def main(argv=None) -> dict:
         seed=args.seed,
         events=args.events,
         faults=args.faults,
+        trace_out=args.trace_out,
+        metrics_out=args.metrics_out,
     )
     result = ElasticTrainer(cfg).run()
     print(json.dumps(result, indent=1))

@@ -1,0 +1,37 @@
+"""repro.obs — deterministic tracing + metrics.
+
+Perfetto-viewable span/event traces on explicit (virtual or monotonic)
+clocks, and mergeable log-bucketed latency histograms behind a versioned
+snapshot schema.  See :mod:`repro.obs.tracer`, :mod:`repro.obs.metrics`,
+and the per-subsystem hook bundles in :mod:`repro.obs.hooks`.
+"""
+
+from repro.obs.hooks import NULL_SERVE_OBS, RouterObs, ServeObs, TrainObs
+from repro.obs.metrics import (
+    SCHEMA,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    bench_rows_snapshot,
+    registry_from_snapshot,
+)
+from repro.obs.tracer import NULL_TRACER, NullTracer, Tracer, VirtualClock
+
+__all__ = [
+    "Tracer",
+    "NullTracer",
+    "NULL_TRACER",
+    "VirtualClock",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "registry_from_snapshot",
+    "bench_rows_snapshot",
+    "SCHEMA",
+    "TrainObs",
+    "ServeObs",
+    "RouterObs",
+    "NULL_SERVE_OBS",
+]

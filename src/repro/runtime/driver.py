@@ -70,7 +70,9 @@ from repro.core import (
 )
 from repro.data import HeteroBatcher, SyntheticLM
 from repro.dist import HeteroStepConfig, build_train_step, init_train_state
+from repro.dist.collectives import ring_allreduce_bytes
 from repro.dist.sharding import state_specs
+from repro.obs import TrainObs
 from repro.launch.mesh import make_test_mesh
 from repro.optim import warmup_cosine
 from repro.core.hetero import normalize_gpu
@@ -126,6 +128,8 @@ class DriverConfig:
     heartbeat_patience: int = 3
     log_every: int = 10
     verbose: bool = True
+    trace_out: str | None = None  # Perfetto trace-event JSON path
+    metrics_out: str | None = None  # metrics snapshot JSON path
 
 
 class ElasticTrainer:
@@ -216,6 +220,9 @@ class ElasticTrainer:
         # tree restores checkpoints written under any later membership
         like_scfg = HeteroStepConfig(w_max=1, micro_bs=cfg.micro_bs, seq_len=self.seq_len, optimizer="adamw")
         self.state = init_train_state(self.model_cfg, like_scfg, jax.random.PRNGKey(cfg.seed))
+        # observability: virtual-clock spans/metrics, no-op unless requested
+        self.obs = TrainObs(cfg.trace_out, cfg.metrics_out)
+        self._param_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(self.state["params"]))
         if self.mgr and cfg.resume and self.mgr.latest_step() is not None:
             self._restore()
         self._build()
@@ -411,6 +418,7 @@ class ElasticTrainer:
             # checkpoint, no early epoch boundary, no rebuild
             self.injector.apply(ev)
             self.fault_log.append({"step": self.step_i, "fault": ev.spec()})
+            self.obs.on_fault(self.step_i, ev.spec(), getattr(ev, "duration", None))
             self._log(f"[fault] step {self.step_i}: {ev.spec()} active")
             return
 
@@ -428,6 +436,10 @@ class ElasticTrainer:
         # (the event cursor saved here still points at this event).
         if self.mgr:
             self.mgr.save(self.step_i, self.state, metadata=self._metadata())
+            self.obs.on_checkpoint(self.step_i)
+        if ev.kind == "outage":
+            # an outage is both a membership change and a fault window
+            self.obs.on_fault(self.step_i, ev.spec(), getattr(ev, "duration", None))
 
         coord = ElasticCoordinator(self.ctl)
         if ev.kind in ("fail", "outage"):
@@ -489,6 +501,7 @@ class ElasticTrainer:
                 "allocation": self.alloc.tolist(),
             }
         )
+        self.obs.on_membership(self.step_i, f"{ev.kind}@{ev.step}", self.gpus, self.alloc)
         self._log(f"[elastic] step {self.step_i}: {ev.kind} -> fleet {self.gpus}, allocation {self.alloc.tolist()}")
         if len(self.gpus) == n and int(np.max(self.alloc)) <= self.w_max:
             # same worker count and the new allocation fits the existing
@@ -531,6 +544,8 @@ class ElasticTrainer:
             # terminal checkpoint so a follow-up --resume with more --steps
             # continues instead of recomputing from the last periodic save
             self.mgr.save(self.step_i, self.state, metadata=self._metadata())
+            self.obs.on_checkpoint(self.step_i)
+        self.obs.close()
         result = {
             "arch": self.model_cfg.name,
             "steps": self.step_i,
@@ -584,6 +599,7 @@ class ElasticTrainer:
             # serializing on steps that actually save
             if self.mgr and self.mgr.is_due(self.step_i):
                 self.mgr.save(self.step_i, self.state, metadata=self._metadata())
+                self.obs.on_checkpoint(self.step_i)
             if self.step_i % cfg.log_every == 0 or self.step_i == 1:
                 self._log(
                     f"step {self.step_i:5d} loss {loss:.4f} "
@@ -603,12 +619,19 @@ class ElasticTrainer:
             # an active netdeg fault scales the collective model (measured
             # mode folds collectives into the wall clock; nothing to scale)
             t_c *= getattr(self.timing, "last_collective_scale", 1.0)
-            flags = self.straggler.observe(t_s / np.maximum(alloc, 1), epoch=self.epoch)
+            flags = self.straggler.observe(t_s / np.maximum(alloc, 1), epoch=self.epoch, step=self.step_i)
             self.straggler_flags += len(flags)
             for f in flags:
                 self.straggler_log.append(
-                    {"epoch": self.epoch, "step_end": self.step_i, "worker": f.worker,
-                     "z": round(f.z_score, 2), "persistent": f.persistent}
+                    {
+                        "epoch": self.epoch,
+                        "step_end": self.step_i,
+                        "worker": f.worker,
+                        "z": round(f.z_score, 2),
+                        "persistent": f.persistent,
+                        "observed": round(f.observed, 6),
+                        "baseline": round(f.baseline, 6),
+                    }
                 )
                 self._log(
                     f"[straggler] epoch {self.epoch}: worker {f.worker} "
@@ -636,6 +659,19 @@ class ElasticTrainer:
                         "step_end": self.step_i,  # fault campaigns date epochs in steps
                     }
                 )
+            if self.obs.enabled and steps_run > 0:
+                self.obs.on_epoch(
+                    self.epoch,
+                    self.step_i,
+                    steps_run,
+                    [float(t) for t in t_s],
+                    t_c,
+                    alloc,
+                    self.gpus,
+                    per_agg=self.simulated,
+                    coll_bytes=ring_allreduce_bytes(self._param_bytes, len(self.gpus)),
+                )
+                self.obs.on_flags(self.epoch, self.step_i, flags)
             if self.cfg.policy == "adaptive":
                 self.alloc = self.ctl.observe(t_s, t_c=t_c)
                 if int(np.max(self.alloc)) > self.w_max:

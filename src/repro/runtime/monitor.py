@@ -149,6 +149,8 @@ class StragglerFlag:
     worker: int
     z_score: float
     persistent: bool
+    observed: float = 0.0  # this observation's per-microbatch seconds
+    baseline: float = 0.0  # the worker's own rolling-baseline mean
 
 
 class StragglerMonitor:
@@ -172,13 +174,18 @@ class StragglerMonitor:
         self._base: list[deque[float]] = [deque(maxlen=window) for _ in range(n_workers)]
         self.flag_log: list[dict] = []  # every flag ever raised, with the epoch tag
 
-    def observe(self, per_sample_time: Sequence[float], epoch: int | None = None) -> list[StragglerFlag]:
+    def observe(
+        self, per_sample_time: Sequence[float], epoch: int | None = None, step: int | None = None
+    ) -> list[StragglerFlag]:
         """Feed normalized (per-microbatch) compute times; returns flags.
 
-        ``epoch`` (optional) tags the entries appended to :attr:`flag_log`,
-        the monitor's full flag history — the fault-injection campaigns score
-        straggler onset/recovery from it, where the return value only carries
-        the CURRENT observation's flags.
+        ``epoch``/``step`` (optional) tag the entries appended to
+        :attr:`flag_log`, the monitor's full flag history — the
+        fault-injection campaigns score straggler onset/recovery from it,
+        where the return value only carries the CURRENT observation's flags.
+        Each flag carries the observed and baseline times that produced its
+        z-score, so consumers can attribute it without re-deriving the
+        rolling statistics.
         """
         t = np.asarray(per_sample_time, dtype=np.float64)
         self._hist.append(t)
@@ -198,12 +205,28 @@ class StragglerMonitor:
             if z > self.z_threshold:
                 recent = np.array([h[i] for h in list(self._hist)[-3:]])
                 persistent = bool(np.all((recent - mean) / std > self.z_threshold))
-                flags.append(StragglerFlag(worker=i, z_score=float(z), persistent=persistent))
+                flags.append(
+                    StragglerFlag(
+                        worker=i,
+                        z_score=float(z),
+                        persistent=persistent,
+                        observed=float(t[i]),
+                        baseline=float(mean),
+                    )
+                )
             else:
                 self._base[i].append(float(t[i]))
         for f in flags:
             self.flag_log.append(
-                {"epoch": epoch, "worker": f.worker, "z": round(f.z_score, 2), "persistent": f.persistent}
+                {
+                    "epoch": epoch,
+                    "step": step,
+                    "worker": f.worker,
+                    "z": round(f.z_score, 2),
+                    "persistent": f.persistent,
+                    "observed": round(f.observed, 6),
+                    "baseline": round(f.baseline, 6),
+                }
             )
         return flags
 

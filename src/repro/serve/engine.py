@@ -130,6 +130,10 @@ class ServeEngine:
         # the full (n_slots, max_seq) cache every tick; paged attends each
         # active slot's live tokens rounded up to page granularity.
         self.attended_key_tokens = 0
+        # the most recent tick's slice of the two counters above — what a
+        # per-tick cost model (benchmarks, obs) reads without differencing
+        self.last_tick_attended = 0
+        self.last_tick_active = 0
 
         def sample(logits, key):
             if temperature > 0.0:
@@ -221,6 +225,7 @@ class ServeEngine:
         self._key = jax.random.PRNGKey(self._seed + 1)
         self.ticks = self.prefills = self.prefill_tokens = 0
         self.tokens_out = self.active_slot_ticks = self.attended_key_tokens = 0
+        self.last_tick_attended = self.last_tick_active = 0
 
     # -- state ---------------------------------------------------------------
 
@@ -340,16 +345,20 @@ class ServeEngine:
         """One decode step over all slots; returns [(rid, tokens), ...] for
         requests that retired this tick."""
         n_active = sum(s.active for s in self.slots)
+        attended = 0
         if self.pool is not None:
             ps = self.layout.page_size
             for b, st in enumerate(self.slots):
                 if st.active:
                     self.pool.ensure(b, st.pos)  # allocate-on-write for this tick's K/V
                     # this tick attends st.pos + 1 live tokens, page-granular
-                    self.attended_key_tokens += self.layout.pages_for(st.pos + 1) * ps
+                    attended += self.layout.pages_for(st.pos + 1) * ps
             self._ship_table()
         else:
-            self.attended_key_tokens += self.n_slots * self.max_seq
+            attended = self.n_slots * self.max_seq
+        self.attended_key_tokens += attended
+        self.last_tick_attended = attended
+        self.last_tick_active = n_active
         self.cache, tok = self._decode(self.params, self.cache, self.last_tok, self._next_key())
         self.last_tok = tok
         self.ticks += 1

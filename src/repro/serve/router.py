@@ -323,12 +323,15 @@ def run_router(
     config: RouterConfig | None = None,
     events: list[dict] | None = None,
     make_replica=None,
+    obs=None,
 ) -> dict:
     """Route ``requests`` across ``replicas`` and drain.
 
     ``events``: membership changes keyed on assignment index (see
     ``_apply_event``); requires ``make_replica(name, speed)`` for add/replace.
-    Returns summary metrics incl. the share trajectory."""
+    ``obs`` (a :class:`repro.obs.RouterObs`) gets the share trajectory and a
+    post-run per-request span/histogram pass over the fleet.  Returns summary
+    metrics incl. the share trajectory."""
     config = config or RouterConfig()
     router = TrafficRouter(len(replicas), config)
     events = sorted(events or [], key=lambda e: e["at"])
@@ -343,6 +346,8 @@ def run_router(
         replicas[router.route()].submit(req)
         if (k + 1) % config.window == 0:
             router.observe([r.harvest_window() for r in replicas])
+            if obs is not None:
+                obs.on_shares(len(router.shares_history) - 1, router.shares)
     while ev_i < len(events):  # events past the last assignment
         _apply_event(events[ev_i], replicas, router, make_replica, graveyard)
         ev_i += 1
@@ -350,6 +355,8 @@ def run_router(
         r.drain()
 
     fleet = [*replicas, *graveyard]
+    if obs is not None:
+        obs.on_done(fleet)
     done = [r for rep in fleet for r in rep.finished]
     lat = np.array([r.latency for r in done], np.float64)
     total_tokens = sum(rep.tokens_done for rep in fleet)

@@ -13,6 +13,8 @@ import time
 
 import numpy as np
 
+from repro.obs.hooks import NULL_SERVE_OBS
+
 __all__ = ["Request", "SchedulerConfig", "Scheduler", "serve_loop", "summarize"]
 
 
@@ -62,9 +64,10 @@ class Scheduler:
     """FIFO queue + admission.  Retirement (EOS / max_gen) lives in the
     engine; the scheduler decides only who enters a slot and when."""
 
-    def __init__(self, config: SchedulerConfig | None = None) -> None:
+    def __init__(self, config: SchedulerConfig | None = None, obs=None) -> None:
         self.config = config or SchedulerConfig()
         self.queue: collections.deque[Request] = collections.deque()
+        self.obs = obs if obs is not None else NULL_SERVE_OBS
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -104,22 +107,40 @@ class Scheduler:
                         f"request {req.rid} (prompt {L}, max_gen {G}) can never be "
                         "admitted by this engine"
                     )
+                self.obs.on_defer("pool", now)
                 break  # transient pressure (page pool) — retry next tick
             self.queue.popleft()
-            _, fin = engine.admit(req.rid, req.prompt, req.max_gen)
+            slot, fin = engine.admit(req.rid, req.prompt, req.max_gen)
             req.t_admit = now
+            self.obs.on_admit(req, slot, now)
             admits += 1
             if fin is not None:
                 finished.append(fin)
+        if self.queue and engine.free_slots and admits >= cap:
+            self.obs.on_defer("prefill_cap", now)
         return finished
 
 
-def serve_loop(engine, requests: list[Request], config: SchedulerConfig | None = None) -> dict:
+def serve_loop(
+    engine,
+    requests: list[Request],
+    config: SchedulerConfig | None = None,
+    *,
+    obs=None,
+    tick_cost=None,
+) -> dict:
     """Drive ``engine`` through ``requests`` (arrivals in tick time).
 
     Mutates each request's ``output``/``t_admit``/``t_finish`` in place and
-    returns ``summarize(...)`` of the run."""
-    sched = Scheduler(config)
+    returns ``summarize(...)`` of the run.
+
+    ``obs`` (a :class:`repro.obs.ServeObs`) receives admit/defer/tick/finish
+    hooks on the tick clock.  ``tick_cost``, if given, maps ``engine`` (after
+    its decode step) to that tick's duration in modeled seconds — the latency
+    bench's analytic cost model; the default keeps 1 tick == 1.0, bit-identical
+    to the uninstrumented loop."""
+    obs = obs if obs is not None else NULL_SERVE_OBS
+    sched = Scheduler(config, obs=obs)
     pending = collections.deque(sorted(requests, key=lambda r: r.arrival))
     by_rid = {r.rid: r for r in requests}
     if len(by_rid) != len(requests):
@@ -131,6 +152,7 @@ def serve_loop(engine, requests: list[Request], config: SchedulerConfig | None =
         r = by_rid[rid]
         r.output = toks
         r.t_finish = now
+        obs.on_finish(r, now)
 
     while pending or sched.queue or engine.has_active:
         while pending and pending[0].arrival <= clock + 1e-9:
@@ -138,9 +160,12 @@ def serve_loop(engine, requests: list[Request], config: SchedulerConfig | None =
         for rid, toks in sched.admit(engine, clock):
             complete(rid, toks, clock)
         if engine.has_active:
-            clock += 1.0
-            for rid, toks in engine.tick():
+            retired = engine.tick()
+            dt = 1.0 if tick_cost is None else float(tick_cost(engine))
+            clock += dt
+            for rid, toks in retired:
                 complete(rid, toks, clock)
+            obs.on_tick(clock, dt, engine, len(sched.queue))
         elif pending:
             clock = max(clock, pending[0].arrival)
         elif sched.queue:  # idle engine + queued work: admit next loop pass
