@@ -33,6 +33,15 @@ scored metrics derive from seeded simulated timing, so the BENCH json is
 bit-identical across reruns at a fixed ``--campaign-seed`` and CI gates on
 it (determinism by byte-compare + summary floors).
 
+``--scenario serve-faults`` runs the SERVING fault campaign
+(``repro.traces.serve_campaign``): replica outage with re-dispatch,
+slow replica with hedged duplicates (first-completion-wins, suppressed by
+request id), and page-pool pressure relieved by paged preemption on a real
+engine.  Gateable summary: duplicates must be 0, every request completes,
+preempted outputs are token-identical, p99-TTFT inflation bounded.  All
+scores derive from seeded virtual-clock timing, so the BENCH json is
+bit-identical across reruns and CI double-runs + cmp's it.
+
 ``--scenario decode-perf`` A/Bs the dense per-slot KV cache against the
 paged layout (page pool + Pallas ragged paged-decode kernel) on one
 mixed-length workload: token output must be identical request-for-request,
@@ -151,6 +160,28 @@ def run_faults_scenario(
             seeds=seeds + (campaign_seed + 2,),
         )
     bench = run_campaign(cfg)
+    print("BENCH " + json.dumps(bench))
+    if json_out:
+        os.makedirs(os.path.dirname(json_out) or ".", exist_ok=True)
+        with open(json_out, "w") as f:
+            json.dump(bench, f, indent=1)
+    return bench
+
+
+def run_serve_faults_scenario(
+    json_out: str | None, smoke: bool = False, campaign_seed: int = 0
+) -> dict:
+    """Seeded fault campaign for the serving stack: replica outage /
+    slow replica (routed virtual-clock fleets) + pool-pressure preemption
+    (real paged engine).  See ``repro.traces.serve_campaign``."""
+    from repro.traces.serve_campaign import ServeCampaignConfig, run_serve_campaign
+
+    seeds = (campaign_seed, campaign_seed + 1)
+    if smoke:
+        cfg = ServeCampaignConfig(seeds=(campaign_seed,))
+    else:
+        cfg = ServeCampaignConfig(seeds=seeds)
+    bench = run_serve_campaign(cfg)
     print("BENCH " + json.dumps(bench))
     if json_out:
         os.makedirs(os.path.dirname(json_out) or ".", exist_ok=True)
@@ -497,7 +528,7 @@ def main() -> None:
     ap.add_argument(
         "--scenario",
         default=None,
-        choices=["elastic", "serve", "decode-perf", "faults", "latency"],
+        choices=["elastic", "serve", "serve-faults", "decode-perf", "faults", "latency"],
         help="run one end-to-end scenario (emits a BENCH json line) instead of the CSV benches",
     )
     ap.add_argument("--smoke", action="store_true", help="shrink the scenario workload (CI)")
@@ -521,6 +552,12 @@ def main() -> None:
     if args.scenario == "serve":
         out = args.json_out or os.path.join(os.path.dirname(__file__), "..", "results", "bench_serve.json")
         run_serve_scenario(out, smoke=args.smoke)
+        return
+    if args.scenario == "serve-faults":
+        out = args.json_out or os.path.join(
+            os.path.dirname(__file__), "..", "results", "bench_serve_faults.json"
+        )
+        run_serve_faults_scenario(out, smoke=args.smoke, campaign_seed=args.campaign_seed)
         return
     if args.scenario == "decode-perf":
         out = args.json_out or os.path.join(

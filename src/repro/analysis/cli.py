@@ -53,7 +53,7 @@ TARGETS = ("train", "serve", "kernels", "specs", "protocol")
 # documented exploration bounds: the clean models' FULL reachable graphs to
 # these depths fit comfortably in the explorer's state ceiling, and every
 # seeded bug class is found well inside them
-PROTOCOL_DEPTHS = {"elastic": 7, "serve": 12}
+PROTOCOL_DEPTHS = {"elastic": 7, "serve": 12, "serve-faults": 12}
 
 # legal smoke-scale combos; (while, fsdp=True) is rejected by validate() and
 # covered by the deadlock fixture instead
@@ -245,11 +245,18 @@ def analyze_specs() -> tuple[list[Finding], dict]:
 
 def analyze_protocol() -> tuple[list[Finding], dict]:
     """Model-check the two protocol harnesses over the real classes."""
-    from repro.analysis.protocol import ElasticModel, ServeModel, explore, format_script
+    from repro.analysis.protocol import (
+        ElasticModel,
+        ServeFaultModel,
+        ServeModel,
+        explore,
+        format_script,
+    )
 
     models = {
         "elastic": (ElasticModel(), PROTOCOL_DEPTHS["elastic"]),
         "serve": (ServeModel(), PROTOCOL_DEPTHS["serve"]),
+        "serve-faults": (ServeFaultModel(), PROTOCOL_DEPTHS["serve-faults"]),
     }
     findings: list[Finding] = []
     meta: dict = {}
@@ -288,9 +295,11 @@ def selftest_protocol() -> tuple[list[Finding], dict]:
     """Prove the model checker catches the bug classes it exists for, and
     that its counterexamples replay.  Known-bad models: a rescale that
     remaps detector state by position instead of survivor index, and a
-    retirement that forgets the page release."""
+    retirement that forgets the page release, and a delivery path that skips
+    duplicate suppression (hedged completions delivered twice)."""
     from repro.analysis.protocol import (
         ElasticModel,
+        ServeFaultModel,
         ServeModel,
         explore,
         format_script,
@@ -301,6 +310,7 @@ def selftest_protocol() -> tuple[list[Finding], dict]:
     cases = {
         "elastic-remap-identity": (lambda: ElasticModel(buggy="remap-identity"), 6),
         "serve-drop-release": (lambda: ServeModel(buggy="drop-release"), 8),
+        "serve-faults-double-deliver": (lambda: ServeFaultModel(buggy="double-deliver"), 6),
     }
     findings: list[Finding] = []
     meta: dict = {}

@@ -8,12 +8,15 @@ protocols, driving the REAL production classes:
   consecutive rescales;
 * :mod:`.serve_model` — paged-KV admission over ``PagePool`` + the real
   ``Scheduler``, proving leak-freedom, no stale slot occupancy, and that
-  reservation-gated admission never strands an admitted request.
+  reservation-gated admission never strands an admitted request; plus
+  ``ServeFaultModel``, the fault-tolerant delivery protocol (replica death,
+  retry, hedging, paged preemption) proving no request is lost, none is
+  delivered twice, and preempted state restores exactly.
 
 :mod:`.explorer` is the generic engine: BFS over canonical fingerprints,
 invariant callbacks on every state, deadlock detection, shortest
 counterexamples delta-shrunk to replayable ``kind@step:spec`` scripts.
-``python -m repro.analysis --target protocol`` runs both models.
+``python -m repro.analysis --target protocol`` runs all models.
 """
 
 from repro.analysis.protocol.elastic_model import ElasticModel, ElasticState
@@ -26,13 +29,20 @@ from repro.analysis.protocol.explorer import (
     replay,
     shrink,
 )
-from repro.analysis.protocol.serve_model import ServeModel, ServeState
+from repro.analysis.protocol.serve_model import (
+    ServeFaultModel,
+    ServeFaultState,
+    ServeModel,
+    ServeState,
+)
 
 __all__ = [
     "ElasticModel",
     "ElasticState",
     "ServeModel",
     "ServeState",
+    "ServeFaultModel",
+    "ServeFaultState",
     "ExploreResult",
     "Violation",
     "explore",

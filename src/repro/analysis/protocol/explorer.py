@@ -44,7 +44,7 @@ __all__ = [
     "parse_script",
 ]
 
-_TERM_RE = re.compile(r"^(?P<kind>[a-z]+)@(?P<step>\d+)(?::(?P<spec>.+))?$")
+_TERM_RE = re.compile(r"^(?P<kind>[a-z_]+)@(?P<step>\d+)(?::(?P<spec>.+))?$")
 
 
 def format_script(actions: Sequence[str]) -> str:

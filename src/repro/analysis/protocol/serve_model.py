@@ -44,7 +44,7 @@ from repro.models.attention import PagedLayout
 from repro.serve.paged import PagePool
 from repro.serve.scheduler import Request, Scheduler, SchedulerConfig
 
-__all__ = ["ServeModel", "ServeState"]
+__all__ = ["ServeModel", "ServeState", "ServeFaultModel", "ServeFaultState"]
 
 # (prompt_len, max_gen) menu — shapes the submit action can enqueue.  All
 # admissible for the default pool; (5, 1) also covers retire-at-admission.
@@ -121,6 +121,33 @@ class _ModelEngine:
         self.pool.check_leak_free()
         self.pool = PagePool(self.layout, self.n_slots)
         self.slots = {}
+
+    # preemption twin: the same pool call sequence as ServeEngine.preempt/
+    # restore (release everything; later reserve the identical worst case
+    # pages_for(pos + rem - 1) and re-allocate the pos-prefix)
+
+    def preempt(self, b: int) -> dict:
+        st = self.slots.pop(b)
+        self.pool.release(b)
+        return {"rid": st.rid, "pos": st.pos, "generated": st.generated, "max_gen": st.max_gen, "eos": st.eos}
+
+    def can_restore(self, state: dict) -> bool:
+        if not self.free_slots:
+            return False
+        return self.pool.can_reserve(state["pos"], state["max_gen"] - state["generated"] + 1)
+
+    def restore(self, state: dict) -> int:
+        b = self.free_slots[0]
+        self.pool.reserve_or_fail(b, state["pos"], state["max_gen"] - state["generated"] + 1)
+        self.pool.allocate_prefix(b, state["pos"])
+        self.slots[b] = _SlotRT(
+            rid=state["rid"],
+            pos=state["pos"],
+            generated=state["generated"],
+            max_gen=state["max_gen"],
+            eos=state["eos"],
+        )
+        return b
 
     def _retire(self, b: int) -> None:
         if self.buggy != "drop-release":
@@ -238,44 +265,298 @@ class ServeModel:
         )
 
     def invariants(self, s: ServeState) -> list[str]:
-        msgs: list[str] = []
-        pool = s.engine.pool
-        try:
-            pool.check_leak_free()
-        except RuntimeError as e:
-            msgs.append(str(e))
-        strand_need = 0
-        for b in range(self.n_slots):
-            reserved = int(pool._reserved[b])
-            allocated = int(pool._allocated[b])
-            pages = pool.slot_pages(b)
-            st = s.engine.slots.get(b)
-            if st is None:
-                if pages or reserved or allocated:
-                    msgs.append(
-                        f"slot {b} has no active request but holds pages={pages} "
-                        f"reserved={reserved} allocated={allocated} — retirement "
-                        "leaked its reservation (missing release?)"
-                    )
-                continue
-            if reserved <= 0:
-                msgs.append(f"active slot {b} has no reservation — admission was not gated")
-            if allocated != self.layout.pages_for(st.pos) or allocated != len(pages):
-                msgs.append(
-                    f"slot {b} accounting drift: pos={st.pos} expects "
-                    f"{self.layout.pages_for(st.pos)} pages, allocated={allocated}, "
-                    f"table holds {len(pages)}"
-                )
-            strand_need += max(reserved - allocated, 0)
-        if strand_need > pool.free_pages:
-            msgs.append(
-                f"reservation not covered: active slots still need {strand_need} "
-                f"page(s) but only {pool.free_pages} are free — an admitted "
-                "request can be stranded mid-generation"
-            )
-        return msgs
+        return _pool_invariants(s.engine, self.layout)
 
     def quiescent(self, s: ServeState) -> bool:
         # remaining submit/reset budget is an option, not an obligation — a
         # run is complete once the queue drained and every slot retired
         return not s.sched.queue and not s.engine.has_active
+
+
+def _pool_invariants(engine: _ModelEngine, layout: PagedLayout, who: str = "") -> list[str]:
+    """The paged-accounting invariants shared by both serve models: leak-free
+    pool, no stale occupancy, admission always reservation-gated, allocation
+    matches the slot position, reservations covered by the free list."""
+    msgs: list[str] = []
+    pool = engine.pool
+    try:
+        pool.check_leak_free()
+    except RuntimeError as e:
+        msgs.append(f"{who}{e}")
+    strand_need = 0
+    for b in range(engine.n_slots):
+        reserved = int(pool._reserved[b])
+        allocated = int(pool._allocated[b])
+        pages = pool.slot_pages(b)
+        st = engine.slots.get(b)
+        if st is None:
+            if pages or reserved or allocated:
+                msgs.append(
+                    f"{who}slot {b} has no active request but holds pages={pages} "
+                    f"reserved={reserved} allocated={allocated} — retirement "
+                    "leaked its reservation (missing release?)"
+                )
+            continue
+        if reserved <= 0:
+            msgs.append(f"{who}active slot {b} has no reservation — admission was not gated")
+        if allocated != layout.pages_for(st.pos) or allocated != len(pages):
+            msgs.append(
+                f"{who}slot {b} accounting drift: pos={st.pos} expects "
+                f"{layout.pages_for(st.pos)} pages, allocated={allocated}, "
+                f"table holds {len(pages)}"
+            )
+        strand_need += max(reserved - allocated, 0)
+    if strand_need > pool.free_pages:
+        msgs.append(
+            f"{who}reservation not covered: active slots still need {strand_need} "
+            f"page(s) but only {pool.free_pages} are free — an admitted "
+            "request can be stranded mid-generation"
+        )
+    return msgs
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerant delivery model: replicas, retry, hedging, preemption
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ServeFaultState:
+    engines: list[_ModelEngine]
+    alive: list[bool]
+    queues: list[list[int]]  # per-replica FIFO of rids
+    pending: list[int]  # router pool: fresh submits + orphans awaiting (re)dispatch
+    stash: list[list[dict]]  # per-replica preempted resume tokens
+    shape_of: dict[int, tuple[int, int]]
+    delivered: dict[int, int]  # rid -> completions delivered to the caller
+    suppressed: int  # duplicate completions suppressed by rid
+    hedged: set[int]
+    restored_log: list[tuple]  # ((saved pos, gen, max_gen), (restored ...)) pairs
+    submits_left: int
+    deaths_left: int
+    hedges_left: int
+    preempts_left: int
+    next_rid: int = 0
+
+
+class ServeFaultModel:
+    """Bounded model of the fault-tolerant delivery protocol: N replicas
+    (each a :class:`_ModelEngine` over a real :class:`PagePool`), a router
+    retry pool, hedged duplicates with first-completion-wins suppression,
+    and paged preemption — exhaustively interleaved.
+
+    Actions: ``submit`` (a request enters the router pool), ``retry:R``
+    (the pool head is (re)dispatched onto replica R — initial routing and
+    post-death retry are the same protocol step), ``admit:R`` / ``tick:R``
+    (replica R makes progress), ``replica_die:R`` (R is killed mid-flight:
+    its queued, in-flight, AND preempted requests are orphaned back to the
+    pool; the engine resets like ``EngineReplica.kill``), ``hedge:R`` (the
+    lowest-rid unhedged in-flight request gains a duplicate on R),
+    ``preempt:R`` / ``restore:R`` (R evicts its busiest slot to the pool
+    stash and later re-seats it).
+
+    Invariants on every reachable state:
+
+    * **no request lost** — every submitted rid is delivered or still held
+      somewhere (pool, a queue, a slot, a stash);
+    * **no request completed twice** — at most one completion per rid is
+      delivered; extra copies (hedge losers, post-death duplicates) are
+      suppressed.  ``buggy="double-deliver"`` skips the suppression and is
+      caught here — the CLI selftest's known-bad model;
+    * **preempted state restores exactly** — every restore re-seats the
+      saved (pos, generated, max_gen) unchanged;
+    * the shared paged-accounting invariants, per replica.
+    """
+
+    def __init__(
+        self,
+        n_replicas: int = 2,
+        page_size: int = 2,
+        n_pages: int = 2,
+        shapes=((1, 3), (2, 1)),
+        submits: int = 2,
+        deaths: int = 1,
+        hedges: int = 1,
+        preempts: int = 1,
+        buggy: str | None = None,
+    ) -> None:
+        if buggy not in (None, "double-deliver"):
+            raise ValueError(f"unknown buggy variant {buggy!r}")
+        if n_replicas < 2:
+            raise ValueError("the delivery protocol needs >= 2 replicas")
+        self.n_replicas = n_replicas
+        self.layout = PagedLayout(page_size=page_size, n_pages=n_pages)
+        self.shapes = tuple(shapes)
+        self.submits = submits
+        self.deaths = deaths
+        self.hedges = hedges
+        self.preempts = preempts
+        self.buggy = buggy
+        for L, G in self.shapes:
+            if not self.layout.pages_for(L + G - 1) <= min(n_pages, self.layout.pages_per_slot):
+                raise ValueError(f"shape ({L}, {G}) can never be admitted — bad model config")
+
+    def initial(self) -> ServeFaultState:
+        return ServeFaultState(
+            engines=[_ModelEngine(self.layout, 1) for _ in range(self.n_replicas)],
+            alive=[True] * self.n_replicas,
+            queues=[[] for _ in range(self.n_replicas)],
+            pending=[],
+            stash=[[] for _ in range(self.n_replicas)],
+            shape_of={},
+            delivered={},
+            suppressed=0,
+            hedged=set(),
+            restored_log=[],
+            submits_left=self.submits,
+            deaths_left=self.deaths,
+            hedges_left=self.hedges,
+            preempts_left=self.preempts,
+        )
+
+    def _hedge_candidate(self, s: ServeFaultState, to: int) -> int | None:
+        """Lowest-rid undelivered request held by another ALIVE replica and
+        not already duplicated onto ``to`` (one clone per rid)."""
+        held: list[int] = []
+        for i in range(self.n_replicas):
+            if not s.alive[i] or i == to:
+                continue
+            held.extend(s.queues[i])
+            held.extend(st.rid for st in s.engines[i].slots.values())
+        on_to = set(s.queues[to]) | {st.rid for st in s.engines[to].slots.values()}
+        cands = [rid for rid in held if rid not in s.hedged and rid not in on_to and not s.delivered.get(rid)]
+        return min(cands) if cands else None
+
+    def actions(self, s: ServeFaultState) -> list[str]:
+        acts: list[str] = []
+        alive = [i for i in range(self.n_replicas) if s.alive[i]]
+        if s.submits_left > 0:
+            for L, G in self.shapes:
+                acts.append(f"submit:{L}x{G}")
+        for i in alive:
+            eng = s.engines[i]
+            if s.pending:
+                acts.append(f"retry:{i}")
+            if s.queues[i]:
+                L, G = s.shape_of[s.queues[i][0]]
+                if eng.can_admit_now(L, G):
+                    acts.append(f"admit:{i}")
+            if eng.has_active:
+                acts.append(f"tick:{i}")
+            if s.deaths_left > 0 and len(alive) > 1:
+                acts.append(f"replica_die:{i}")
+            if s.hedges_left > 0 and self._hedge_candidate(s, i) is not None:
+                acts.append(f"hedge:{i}")
+            if s.preempts_left > 0 and eng.has_active:
+                acts.append(f"preempt:{i}")
+            if s.stash[i] and eng.can_restore(s.stash[i][0]):
+                acts.append(f"restore:{i}")
+        return sorted(acts)
+
+    def _deliver(self, s: ServeFaultState, rid: int) -> None:
+        if s.delivered.get(rid, 0) >= 1 and self.buggy != "double-deliver":
+            s.suppressed += 1  # first completion won; this copy is a duplicate
+            return
+        s.delivered[rid] = s.delivered.get(rid, 0) + 1
+
+    def apply(self, state: ServeFaultState, action: str) -> ServeFaultState:
+        s = copy.deepcopy(state)
+        kind, _, spec = action.partition(":")
+        if kind == "submit":
+            left, _, right = spec.partition("x")
+            s.shape_of[s.next_rid] = (int(left), int(right))
+            s.pending.append(s.next_rid)
+            s.next_rid += 1
+            s.submits_left -= 1
+            return s
+        i = int(spec)
+        eng = s.engines[i]
+        if kind == "retry":
+            s.queues[i].append(s.pending.pop(0))
+        elif kind == "admit":
+            rid = s.queues[i].pop(0)
+            L, G = s.shape_of[rid]
+            _, fin = eng.admit(rid, np.zeros(L, np.int32), G)
+            if fin is not None:
+                self._deliver(s, rid)
+        elif kind == "tick":
+            for rid, _gen in eng.tick():
+                self._deliver(s, rid)
+        elif kind == "replica_die":
+            # orphan everything the replica held — queued, in-flight, and
+            # preempted-evicted — back to the router pool (the prompt is the
+            # checkpoint); the engine resets like EngineReplica.kill()
+            orphans = list(s.queues[i])
+            orphans += [st.rid for _, st in sorted(eng.slots.items())]
+            orphans += [t["rid"] for t in s.stash[i]]
+            s.queues[i] = []
+            s.stash[i] = []
+            eng.reset()
+            s.alive[i] = False
+            s.pending.extend(orphans)
+            s.deaths_left -= 1
+        elif kind == "hedge":
+            rid = self._hedge_candidate(s, i)
+            s.hedged.add(rid)
+            s.queues[i].append(rid)
+            s.hedges_left -= 1
+        elif kind == "preempt":
+            b = min(eng.slots)
+            s.stash[i].append(eng.preempt(b))
+            s.preempts_left -= 1
+        elif kind == "restore":
+            t = s.stash[i].pop(0)
+            b = eng.restore(t)
+            got = eng.slots[b]
+            s.restored_log.append(
+                ((t["pos"], t["generated"], t["max_gen"]), (got.pos, got.generated, got.max_gen))
+            )
+        else:
+            raise ValueError(f"unknown action {action!r}")
+        return s
+
+    def fingerprint(self, s: ServeFaultState) -> tuple:
+        return (
+            tuple(s.alive),
+            tuple(
+                e.fingerprint() + (tuple(sorted((b, st.rid) for b, st in e.slots.items())),) for e in s.engines
+            ),
+            tuple(tuple(q) for q in s.queues),
+            tuple(s.pending),
+            tuple(tuple(tuple(sorted(t.items())) for t in r) for r in s.stash),
+            tuple(sorted(s.shape_of.items())),
+            tuple(sorted(s.delivered.items())),
+            s.suppressed,
+            tuple(sorted(s.hedged)),
+            tuple(s.restored_log),
+            (s.submits_left, s.deaths_left, s.hedges_left, s.preempts_left, s.next_rid),
+        )
+
+    def invariants(self, s: ServeFaultState) -> list[str]:
+        msgs: list[str] = []
+        for i, eng in enumerate(s.engines):
+            msgs.extend(_pool_invariants(eng, self.layout, who=f"replica {i}: "))
+        held = set(s.pending)
+        for i in range(self.n_replicas):
+            held.update(s.queues[i])
+            held.update(st.rid for st in s.engines[i].slots.values())
+            held.update(t["rid"] for t in s.stash[i])
+        for rid in range(s.next_rid):
+            if s.delivered.get(rid, 0) == 0 and rid not in held:
+                msgs.append(f"request {rid} lost: never delivered and held nowhere")
+            if s.delivered.get(rid, 0) > 1:
+                msgs.append(f"request {rid} completed twice: delivered {s.delivered[rid]} times")
+        for saved, got in s.restored_log:
+            if saved != got:
+                msgs.append(f"preempted state restored inexactly: saved {saved}, restored {got}")
+        return msgs
+
+    def quiescent(self, s: ServeFaultState) -> bool:
+        # remaining fault budget is an option, not an obligation — a run is
+        # complete once nothing is pending, queued, in flight, or stashed
+        return (
+            not s.pending
+            and not any(s.queues)
+            and not any(e.has_active for e in s.engines)
+            and not any(s.stash)
+        )

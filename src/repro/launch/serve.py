@@ -15,6 +15,11 @@ adaptive-router experiment end-to-end.
 ragged paged-decode kernel — decode cost proportional to live tokens, and
 ``prompt + max_gen`` may exceed ``--max-seq`` (pool-bounded instead).
 
+``--preempt`` (paged only) turns on graceful degradation: under page-pool
+pressure the scheduler evicts the active slot with the most remaining
+generation budget back to the pool (pages are the checkpoint) and restores
+it token-identically once pressure clears.
+
 ``--trace`` replays a cluster trace's task arrivals (``repro.traces``)
 instead of the synthetic Poisson stream — diurnal/bursty arrival shapes and
 per-task prompt/gen lengths come from the trace, token payloads stay
@@ -82,6 +87,13 @@ def main(argv=None) -> dict:
     )
     ap.add_argument("--trace-time-scale", type=float, default=1.0)
     ap.add_argument("--static", action="store_true", help="static-batch baseline (admit only when idle)")
+    ap.add_argument(
+        "--preempt",
+        action="store_true",
+        help="paged only: under pool pressure, evict the slot with the most "
+        "remaining generation (pages are the checkpoint) and restore it "
+        "token-identically once pressure clears",
+    )
     ap.add_argument("--temperature", type=float, default=0.0, help="0 = greedy")
     ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
@@ -109,6 +121,8 @@ def main(argv=None) -> dict:
 
     worst_case = args.prompt_lens[1] + args.gen_lens[1]
     paged = args.attn_impl == "paged"
+    if args.preempt and not paged:
+        ap.error("--preempt requires --attn-impl paged (pages are the preemption checkpoint)")
     max_seq = args.max_seq or worst_case
     if paged:
         # paged admission is pool-bounded: only the PROMPT must fit the
@@ -169,7 +183,11 @@ def main(argv=None) -> dict:
     summary = serve_loop(
         engine,
         requests,
-        SchedulerConfig(max_waiting_prefill=args.max_prefills_per_tick, continuous=not args.static),
+        SchedulerConfig(
+            max_waiting_prefill=args.max_prefills_per_tick,
+            continuous=not args.static,
+            preempt=args.preempt,
+        ),
         obs=obs,
     )
     result = {

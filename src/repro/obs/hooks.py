@@ -227,6 +227,24 @@ class ServeObs(_ObsBase):
                     {"free": pm["free_pages"], "reserved": pm["reserved_pages"], "allocated": pm["allocated_pages"]},
                 )
 
+    def on_preempt(self, rid, slot, now) -> None:
+        """Slot evicted back to the page pool (pages are the checkpoint)."""
+        if not self.enabled:
+            return
+        self._slot_of.pop(rid, None)
+        if self.metrics is not None:
+            self.metrics.counter("serve.preemptions").inc()
+        self.tracer.instant(f"serve/slot {slot}", f"preempt rid={rid}", now)
+
+    def on_restore(self, rid, slot, now) -> None:
+        """Preempted request re-seated (deterministic re-prefill)."""
+        if not self.enabled:
+            return
+        self._slot_of[rid] = slot
+        if self.metrics is not None:
+            self.metrics.counter("serve.restores").inc()
+        self.tracer.instant(f"serve/slot {slot}", f"restore rid={rid}", now)
+
     def on_finish(self, req, now) -> None:
         if not self.enabled:
             return
@@ -265,6 +283,31 @@ class RouterObs(_ObsBase):
             float(window_idx),
             {f"r{i}": round(float(s), 6) for i, s in enumerate(shares)},
         )
+
+    def on_death(self, name, step) -> None:
+        """A replica was killed mid-flight (fail/outage fault)."""
+        if not self.enabled:
+            return
+        if self.metrics is not None:
+            self.metrics.counter("router.replica_deaths").inc()
+        self.tracer.instant("router/events", f"replica {name} died", float(step))
+
+    def on_retry(self, rid, to_name, step, retry=True) -> None:
+        """An orphaned request re-dispatched (``retry=True``: its replica
+        died mid-flight; ``False``: graceful-decommission backlog move)."""
+        if not self.enabled:
+            return
+        if self.metrics is not None:
+            self.metrics.counter("router.retries" if retry else "router.redistributed").inc()
+        self.tracer.instant("router/events", f"{'retry' if retry else 'redistribute'} rid={rid} -> {to_name}", float(step))
+
+    def on_hedge(self, rid, to_name, step) -> None:
+        """A stalled request hedged onto a second replica."""
+        if not self.enabled:
+            return
+        if self.metrics is not None:
+            self.metrics.counter("router.hedges").inc()
+        self.tracer.instant("router/events", f"hedge rid={rid} -> {to_name}", float(step))
 
     def on_done(self, fleet) -> None:
         """Post-run pass over the fleet (live replicas + graveyard): emit one

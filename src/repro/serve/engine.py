@@ -59,6 +59,7 @@ class _Slot:
     out: list = dataclasses.field(default_factory=list)
     active: bool = False
     pos: int = 0  # host mirror of the device index clock (next position to write)
+    prompt: np.ndarray | None = None  # kept so preemption can re-prefill
 
 
 class ServeEngine:
@@ -125,6 +126,8 @@ class ServeEngine:
         self.prefill_tokens = 0
         self.tokens_out = 0
         self.active_slot_ticks = 0
+        self.preemptions = 0
+        self.restores = 0
         # analytic decode-cost counter: KV positions attended per
         # global-attention layer, summed over ticks and slots.  Dense attends
         # the full (n_slots, max_seq) cache every tick; paged attends each
@@ -226,6 +229,7 @@ class ServeEngine:
         self.ticks = self.prefills = self.prefill_tokens = 0
         self.tokens_out = self.active_slot_ticks = self.attended_key_tokens = 0
         self.last_tick_attended = self.last_tick_active = 0
+        self.preemptions = self.restores = 0
 
     # -- state ---------------------------------------------------------------
 
@@ -292,13 +296,31 @@ class ServeEngine:
             self.pool.allocate_prefix(b, L)
         elif L < 1 or L + max_gen > self.max_seq:
             raise ValueError(f"prompt_len {L} + max_gen {max_gen} exceeds max_seq {self.max_seq}")
+        first = self._prefill_into_slot(b, prompt)
+        st = self.slots[b]
+        st.rid, st.max_gen, st.generated, st.out, st.active = rid, max_gen, 1, [first], True
+        st.pos = L
+        st.prompt = prompt
+        self.tokens_out += 1
+        if (self.eos_id is not None and first == self.eos_id) or st.generated >= st.max_gen:
+            st.active = False
+            if self.pool is not None:
+                self.pool.release(b)
+            return b, (rid, st.out)
+        return b, None
+
+    def _prefill_into_slot(self, b: int, tokens: np.ndarray) -> int:
+        """Run the bucketed batched prefill for ``tokens`` and splice the
+        batch-1 cache into slot ``b`` (pages must already be reserved +
+        prefix-allocated for paged engines).  Returns the sampled token."""
+        L = int(tokens.shape[0])
         bucket = bucket_len(L, self.min_bucket)
         if self.cfg.embeds_input:
-            padded = np.zeros((1, bucket, prompt.shape[1]), np.float32)
-            padded[0, :L] = prompt
+            padded = np.zeros((1, bucket, tokens.shape[1]), np.float32)
+            padded[0, :L] = tokens
         else:
             padded = np.zeros((1, bucket), np.int32)
-            padded[0, :L] = prompt
+            padded[0, :L] = tokens
         fn = self._prefill_by_bucket.get(bucket)
         if fn is None:
             fn = self._prefill_by_bucket[bucket] = self._make_prefill()
@@ -325,19 +347,78 @@ class ServeEngine:
             self._ship_table()
         else:
             self.cache, self.last_tok = self._insert(self.cache, small, self.last_tok, b, tok[0])
-        first = int(tok[0])
-        st = self.slots[b]
-        st.rid, st.max_gen, st.generated, st.out, st.active = rid, max_gen, 1, [first], True
-        st.pos = L
         self.prefills += 1
         self.prefill_tokens += L
-        self.tokens_out += 1
-        if (self.eos_id is not None and first == self.eos_id) or st.generated >= st.max_gen:
-            st.active = False
-            if self.pool is not None:
-                self.pool.release(b)
-            return b, (rid, st.out)
-        return b, None
+        return int(tok[0])
+
+    # -- preemption (paged: pages are the checkpoint) -------------------------
+
+    def can_preempt(self, slot: int) -> bool:
+        """An active PAGED slot whose live prefix still fits the prefill
+        buffer can be evicted now and restored token-identically later."""
+        st = self.slots[slot]
+        return self.pool is not None and st.active and st.pos <= self.max_seq
+
+    def preempt(self, slot: int) -> dict:
+        """Evict an active slot: release its pages back to the pool and
+        return an rng-free resume token.  No cache tensors are saved — the
+        generated prefix IS the checkpoint: :meth:`restore` re-prefills
+        ``prompt + out[:-1]`` (a deterministic forward pass) and re-seats
+        the saved last token, which is bit-identical to never having been
+        evicted for greedy (temperature 0) decoding."""
+        if not self.can_preempt(slot):
+            raise RuntimeError(f"slot {slot} cannot be preempted (inactive, dense, or prefix past the prefill buffer)")
+        st = self.slots[slot]
+        self.pool.release(slot)
+        state = {
+            "rid": st.rid,
+            "prompt": st.prompt,
+            "out": list(st.out),
+            "generated": st.generated,
+            "max_gen": st.max_gen,
+            "pos": st.pos,
+        }
+        self.slots[slot] = _Slot()
+        self.preemptions += 1
+        return state
+
+    def can_restore(self, state: dict) -> bool:
+        if self.pool is None or not self.free_slots or state["pos"] > self.max_seq:
+            return False
+        return self.pool.can_reserve(state["pos"], state["max_gen"] - state["generated"] + 1)
+
+    def restore(self, state: dict) -> int:
+        """Re-seat a preempted request: reserve pages for the remaining
+        budget, re-prefill the prompt + generated prefix, and overwrite the
+        re-sampled tail token with the SAVED one so the continuation is
+        token-identical to the uninterrupted run.  Returns the slot."""
+        if self.pool is None:
+            raise RuntimeError("restore requires a paged engine")
+        free = self.free_slots
+        if not free:
+            raise RuntimeError("no free slot — restore must be gated on can_restore")
+        b = free[0]
+        prompt, out, pos = state["prompt"], state["out"], state["pos"]
+        if self.cfg.embeds_input:
+            embed = np.asarray(self.params["embed"])
+            gen = embed[np.asarray(out[:-1], np.int64)] if len(out) > 1 else np.zeros((0, prompt.shape[1]), prompt.dtype)
+            prefix = np.concatenate([np.asarray(prompt), gen.astype(prompt.dtype)], axis=0)
+        else:
+            prefix = np.concatenate([np.asarray(prompt, np.int32), np.asarray(out[:-1], np.int32)])
+        if prefix.shape[0] != pos:
+            raise RuntimeError(f"corrupt resume state: prefix {prefix.shape[0]} != pos {pos}")
+        # same worst case as the original admission: pages_for(L + max_gen - 1)
+        self.pool.reserve_or_fail(b, pos, state["max_gen"] - state["generated"] + 1)
+        self.pool.allocate_prefix(b, pos)
+        self._prefill_into_slot(b, prefix)
+        self.last_tok = self.last_tok.at[b].set(int(out[-1]))  # rng-free resume: the saved token, not a resample
+        st = self.slots[b]
+        st.rid, st.max_gen, st.generated, st.active = state["rid"], state["max_gen"], state["generated"], True
+        st.out = list(out)
+        st.pos = pos
+        st.prompt = state["prompt"]
+        self.restores += 1
+        return b
 
     # -- decode --------------------------------------------------------------
 
@@ -389,6 +470,8 @@ class ServeEngine:
             "prefills": self.prefills,
             "prefill_tokens": self.prefill_tokens,
             "tokens_out": self.tokens_out,
+            "preemptions": self.preemptions,
+            "restores": self.restores,
             "attended_key_tokens": self.attended_key_tokens,
             "slot_utilization": self.active_slot_ticks / (self.ticks * self.n_slots) if self.ticks else 0.0,
         }

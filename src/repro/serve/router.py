@@ -16,6 +16,17 @@ relative ``speed`` — the same modeled-hardware device this repo uses for
 heterogeneous training on one CPU (``core/hetero.py``).  Replica
 add/remove/replace mirror the elastic runtime's fig. 11 membership changes,
 warm-starting the controller with measured survivor speeds via ``resize``.
+
+Fault tolerance: ``run_router(faults=...)`` drives the PR-6 fault grammar
+against the fleet — ``slow``/``netdeg`` scale per-replica tick cost through
+``FaultyReplicaClock`` (the serving mirror of ``FaultyTimingSource``), and
+``outage``/``fail`` kill live replicas mid-flight.  A killed replica's
+unfinished requests (queued AND in-flight) are re-queued and re-dispatched:
+the prompt is the checkpoint, so a deterministic re-prefill on a survivor
+reproduces the exact tokens the fault-free run would have produced.
+Stalled requests past ``hedge_timeout`` are hedged to a second replica;
+the first completion wins and the duplicate is suppressed by request id —
+the delivery protocol the ``ServeFaultModel`` checker proves exactly-once.
 """
 
 from __future__ import annotations
@@ -25,7 +36,9 @@ import dataclasses
 import numpy as np
 
 from repro.core.controller import AdaptiveAllocationController, ControllerConfig
+from repro.core.hetero import GPU_RELATIVE_THROUGHPUT, normalize_gpu
 from repro.serve.scheduler import Request
+from repro.traces.faults import FaultInjector, FaultyReplicaClock, parse_faults
 
 __all__ = ["RouterConfig", "TrafficRouter", "EngineReplica", "ModelReplica", "run_router"]
 
@@ -124,6 +137,7 @@ class _ReplicaBase:
         self.prefill_cost_per_token = prefill_cost_per_token
         self.clock = 0.0
         self.busy = 0.0
+        self.tick_scale = 1.0  # fault-injected virtual slowdown (FaultyReplicaClock)
         self.tokens_done = 0
         self.queue: list[Request] = []
         self.finished: list[Request] = []
@@ -147,6 +161,10 @@ class _ReplicaBase:
         """Returns (tokens_produced, [(rid, n_tokens) finished])."""
         raise NotImplementedError
 
+    def _abort_active(self) -> None:
+        """Discard all in-flight slot state (replica killed mid-request)."""
+        raise NotImplementedError
+
     # driver ----------------------------------------------------------------
 
     def submit(self, req: Request) -> None:
@@ -166,14 +184,14 @@ class _ReplicaBase:
         while self.queue and self._can_admit():
             req = self.queue.pop(0)
             req.t_admit = self.clock
-            cost = self.prefill_cost_per_token * len(req.prompt) / self.speed
+            cost = self.prefill_cost_per_token * len(req.prompt) * self.tick_scale / self.speed
             self.clock += cost
             self.busy += cost
             for rid, n in self._admit(req):
                 self._complete(rid, n)
         if self._has_active():
             made, fins = self._tick()
-            dt = 1.0 / self.speed
+            dt = self.tick_scale / self.speed
             self.clock += dt
             self.busy += dt
             self.tokens_done += made
@@ -184,9 +202,42 @@ class _ReplicaBase:
         while self.clock < t and (self.queue or self._has_active()):
             self._step()
 
-    def drain(self) -> None:
-        while self.queue or self._has_active():
+    def drain(self, max_ticks: int = 1_000_000) -> None:
+        """Run to completion.  Bounded: a slot that never retires (exactly
+        the hang a fault can trigger) raises with the stuck request ids
+        instead of spinning the virtual clock forever."""
+        for _ in range(max_ticks):
+            if not (self.queue or self._has_active()):
+                return
             self._step()
+        raise RuntimeError(
+            f"replica {self.name!r} did not drain within {max_ticks} ticks; stuck request ids: {sorted(self._by_rid)}"
+        )
+
+    # fault handling --------------------------------------------------------
+
+    def take_queue(self) -> list[Request]:
+        """Remove and return queued-but-not-admitted requests so a
+        membership change can redistribute the backlog to survivors."""
+        taken, self.queue = self.queue, []
+        for r in taken:
+            del self._by_rid[r.rid]
+        return taken
+
+    def kill(self) -> list[Request]:
+        """Hard failure: drop every unfinished request (queued and
+        in-flight) and return them reset to pre-admission state.  The
+        prompt is the checkpoint — a deterministic re-prefill on another
+        replica reproduces the exact tokens a fault-free run would have."""
+        orphans = list(self._by_rid.values())
+        self._by_rid.clear()
+        self.queue.clear()
+        self._abort_active()
+        for r in orphans:
+            r.t_admit = None
+            r.t_finish = None
+            r.output = None
+        return orphans
 
     # measurement -----------------------------------------------------------
 
@@ -236,6 +287,9 @@ class EngineReplica(_ReplicaBase):
             out.append((rid, len(toks)))
         return self.engine.tokens_out - before, out
 
+    def _abort_active(self) -> None:
+        self.engine.reset()
+
 
 class ModelReplica(_ReplicaBase):
     """Pure speed-model replica (no engine): each active slot yields one
@@ -274,47 +328,59 @@ class ModelReplica(_ReplicaBase):
                 self._active[rid] = (rem, total)
         return made, fins
 
+    def _abort_active(self) -> None:
+        self._active.clear()
+
 
 # ---------------------------------------------------------------------------
 # routed serving run (with elastic membership events)
 # ---------------------------------------------------------------------------
 
 
-def _apply_event(ev: dict, replicas: list, router: TrafficRouter, make_replica, graveyard: list) -> None:
+def _carried_speeds(replicas: list) -> tuple[list, float]:
+    """Measured per-replica speeds with fleet-mean fill for the unmeasured."""
+    carried = [r.lifetime_tok_per_s() for r in replicas]
+    known = [c for c in carried if c]
+    mean_v = sum(known) / len(known) if known else 1.0
+    return [c if c else mean_v for c in carried], mean_v
+
+
+def _apply_event(ev: dict, replicas: list, router: TrafficRouter, make_replica, graveyard: list) -> list[Request]:
     """Membership event at assignment time: {"at": k, "kind": "add"|"remove"|
-    "replace", ...}.  Affected replicas drain first (graceful decommission)
-    and retire into ``graveyard`` so their work stays in the accounting,
-    then the controller re-targets with measured survivor speeds — the
-    serving mirror of the elastic runtime's fig. 11 scenarios."""
+    "replace", ...}.  A decommissioned replica's *queued* backlog is taken
+    first (the caller redistributes it through the router — not dropped),
+    its in-flight work drains in place (graceful decommission), and it
+    retires into ``graveyard`` so its work stays in the accounting; then
+    the controller re-targets with measured survivor speeds — the serving
+    mirror of the elastic runtime's fig. 11 scenarios.  Returns the taken
+    backlog."""
     kind = ev["kind"]
+    orphaned: list[Request] = []
     if kind == "replace":
         i = ev["index"]
+        orphaned = replicas[i].take_queue()
         replicas[i].drain()
-        carried = [r.lifetime_tok_per_s() for r in replicas]
-        known = [c for c in carried if c]
-        mean_v = sum(known) / len(known) if known else 1.0
+        carried, mean_v = _carried_speeds(replicas)
         old = replicas[i]
         graveyard.append(old)
         replicas[i] = make_replica(ev.get("name", f"{old.name}+"), ev["speed"])
         replicas[i].clock = old.clock
         carried[i] = mean_v  # newcomer starts at fleet-mean speed estimate
-        router.resize(len(replicas), [c if c else mean_v for c in carried])
+        router.resize(len(replicas), carried)
     elif kind == "add":
-        carried = [r.lifetime_tok_per_s() for r in replicas]
-        known = [c for c in carried if c]
-        mean_v = sum(known) / len(known) if known else 1.0
+        carried, mean_v = _carried_speeds(replicas)
         replicas.append(make_replica(ev.get("name", f"replica{len(replicas)}"), ev["speed"]))
-        router.resize(len(replicas), [*(c if c else mean_v for c in carried), mean_v])
+        router.resize(len(replicas), [*carried, mean_v])
     elif kind == "remove":
         i = ev["index"]
+        orphaned = replicas[i].take_queue()
         replicas[i].drain()
         graveyard.append(replicas.pop(i))
-        carried = [r.lifetime_tok_per_s() for r in replicas]
-        known = [c for c in carried if c]
-        mean_v = sum(known) / len(known) if known else 1.0
-        router.resize(len(replicas), [c if c else mean_v for c in carried])
+        carried, _ = _carried_speeds(replicas)
+        router.resize(len(replicas), carried)
     else:
         raise ValueError(f"unknown membership event kind {kind!r}")
+    return orphaned
 
 
 def run_router(
@@ -324,40 +390,207 @@ def run_router(
     events: list[dict] | None = None,
     make_replica=None,
     obs=None,
+    faults=None,
+    hedge_timeout: float | None = None,
 ) -> dict:
     """Route ``requests`` across ``replicas`` and drain.
 
     ``events``: membership changes keyed on assignment index (see
     ``_apply_event``); requires ``make_replica(name, speed)`` for add/replace.
-    ``obs`` (a :class:`repro.obs.RouterObs`) gets the share trajectory and a
-    post-run per-request span/histogram pass over the fleet.  Returns summary
-    metrics incl. the share trajectory."""
+    ``faults``: a PR-6 fault schedule (grammar string or ``FaultEvent``
+    list) whose *steps are assignment indices* — ``slow``/``netdeg`` scale
+    replica tick cost via ``FaultyReplicaClock``; ``fail``/``outage`` kill
+    live replicas mid-flight (orphans re-dispatched; an outage with a
+    duration rejoins its members ``duration`` assignments later, which
+    needs ``make_replica``); ``add``/``replace`` join/crash-swap with the
+    GPU throughput table supplying the speed.
+    ``hedge_timeout``: virtual seconds after which an unfinished dispatch
+    is hedged onto a second replica — first completion wins, the duplicate
+    is suppressed by request id.
+    ``obs`` (a :class:`repro.obs.RouterObs`) gets the share trajectory,
+    fault/retry/hedge instants, and a post-run per-request span/histogram
+    pass over the fleet.  Returns summary metrics incl. the share
+    trajectory and the fault counters."""
     config = config or RouterConfig()
     router = TrafficRouter(len(replicas), config)
     events = sorted(events or [], key=lambda e: e["at"])
+    if isinstance(faults, str):
+        faults = parse_faults(faults)
+    faults = sorted(faults or [], key=lambda f: f.step)
     ev_i = 0
+    fault_i = 0
     graveyard: list = []
+    originals = {r.rid: r for r in requests}
+    counters = {"retries": 0, "redistributed": 0, "hedges": 0, "hedges_won": 0, "hedges_lost": 0, "replica_deaths": 0}
+    step_box = [0]  # current fault step = assignment index
+    injector = FaultInjector(len(replicas))
+    fclock = FaultyReplicaClock(injector, lambda: step_box[0])
+    rejoins: list[dict] = []  # {"at": step, "members": [(name, speed), ...]}
+    dispatch: dict[int, float] = {}  # rid -> virtual time of latest dispatch
+    hedged: dict[int, Request] = {}  # rid -> its hedge clone
+
+    def redistribute(orphans: list[Request], retry: bool) -> None:
+        for r in sorted(orphans, key=lambda q: q.rid):
+            counters["retries" if retry else "redistributed"] += 1
+            tgt = replicas[router.route()]
+            tgt.submit(r)
+            dispatch[r.rid] = tgt.clock
+            if obs is not None:
+                obs.on_retry(r.rid, tgt.name, step_box[0], retry=retry)
+
+    def kill_members(victims: list[int], ev, rejoin: bool) -> None:
+        if max(victims) >= len(replicas):
+            raise ValueError(f"fault {ev.spec()!r}: replica index out of range for fleet of {len(replicas)}")
+        if len(replicas) - len(victims) < 1:
+            raise ValueError(f"fault {ev.spec()!r} would kill the entire fleet")
+        members = [(replicas[i].name, replicas[i].speed) for i in victims]
+        orphans: list[Request] = []
+        for i in sorted(victims, reverse=True):
+            rep = replicas.pop(i)
+            orphans.extend(rep.kill())
+            graveyard.append(rep)
+            counters["replica_deaths"] += 1
+            if obs is not None:
+                obs.on_death(rep.name, step_box[0])
+        n_before = len(replicas) + len(victims)
+        injector.rescale([i for i in range(n_before) if i not in victims], 0)
+        carried, _ = _carried_speeds(replicas)
+        router.resize(len(replicas), carried)
+        if rejoin and ev.duration is not None:
+            rejoins.append({"at": ev.step + ev.duration, "members": members})
+        redistribute(orphans, retry=True)
+
+    def join_member(name: str, speed: float, clock: float = 0.0) -> None:
+        rep = make_replica(name, speed)
+        rep.clock = clock
+        replicas.append(rep)
+        injector.rescale(list(range(len(replicas) - 1)), 1)
+        carried, _ = _carried_speeds(replicas)
+        router.resize(len(replicas), carried)
+
+    def apply_fault(ev) -> None:
+        if ev.kind in ("slow", "netdeg"):
+            injector.apply(ev)
+        elif ev.kind == "fail":
+            kill_members([ev.index], ev, rejoin=False)
+        elif ev.kind == "outage":
+            kill_members(sorted(ev.workers), ev, rejoin=True)
+        elif ev.kind == "add":
+            join_member(f"replica{len(replicas)}+", GPU_RELATIVE_THROUGHPUT[normalize_gpu(ev.gpu)])
+        elif ev.kind == "replace":  # crash-swap: kill the slot, join the newcomer
+            kill_members([ev.index], ev, rejoin=False)
+            join_member(f"replica{len(replicas)}+", GPU_RELATIVE_THROUGHPUT[normalize_gpu(ev.gpu)])
+
+    def process_rejoins() -> None:
+        due = [rj for rj in rejoins if rj["at"] <= step_box[0]]
+        if not due:
+            return
+        rejoins[:] = [rj for rj in rejoins if rj["at"] > step_box[0]]
+        frontier = max((r.clock for r in replicas), default=0.0)
+        for rj in due:
+            for name, speed in rj["members"]:
+                join_member(f"{name}'", speed, clock=frontier)
+
+    def maybe_hedge(now: float) -> None:
+        if hedge_timeout is None or len(replicas) < 2:
+            return
+        for rid, t0 in list(dispatch.items()):
+            orig = originals[rid]
+            if rid in hedged or orig.t_finish is not None or now - t0 <= hedge_timeout:
+                continue
+            src = next((rep for rep in replicas if rid in rep._by_rid), None)
+            if src is None:
+                continue
+            j = router.route()
+            if replicas[j] is src:
+                j = (j + 1) % len(replicas)
+            clone = Request(rid=rid, prompt=orig.prompt, max_gen=orig.max_gen, arrival=now)
+            hedged[rid] = clone
+            counters["hedges"] += 1
+            replicas[j].submit(clone)
+            dispatch[rid] = replicas[j].clock
+            if obs is not None:
+                obs.on_hedge(rid, replicas[j].name, step_box[0])
+
     for k, req in enumerate(sorted(requests, key=lambda r: r.arrival)):
+        step_box[0] = k
         while ev_i < len(events) and events[ev_i]["at"] <= k:
-            _apply_event(events[ev_i], replicas, router, make_replica, graveyard)
+            redistribute(_apply_event(events[ev_i], replicas, router, make_replica, graveyard), retry=False)
             ev_i += 1
+        while fault_i < len(faults) and faults[fault_i].step <= k:
+            apply_fault(faults[fault_i])
+            fault_i += 1
+        process_rejoins()
+        if faults:
+            fclock.apply(replicas)
         for r in replicas:
             r.run_until(req.arrival)
-        replicas[router.route()].submit(req)
+        maybe_hedge(req.arrival)
+        tgt = replicas[router.route()]
+        tgt.submit(req)
+        dispatch[req.rid] = tgt.clock
         if (k + 1) % config.window == 0:
             router.observe([r.harvest_window() for r in replicas])
             if obs is not None:
                 obs.on_shares(len(router.shares_history) - 1, router.shares)
+    step_box[0] = len(requests)
     while ev_i < len(events):  # events past the last assignment
-        _apply_event(events[ev_i], replicas, router, make_replica, graveyard)
+        redistribute(_apply_event(events[ev_i], replicas, router, make_replica, graveyard), retry=False)
         ev_i += 1
-    for r in replicas:
-        r.drain()
+    while fault_i < len(faults):
+        apply_fault(faults[fault_i])
+        fault_i += 1
+    process_rejoins()
+    if faults:
+        fclock.apply(replicas)
+    if hedge_timeout is None:
+        for r in replicas:
+            r.drain()
+    else:
+        # staged drain: advance the whole fleet in lockstep time quanta so
+        # stalled requests can still be hedged onto faster survivors
+        horizon = max((r.clock for r in replicas), default=0.0)
+        quantum = max(hedge_timeout / 4.0, 1e-6)
+        for _ in range(1_000_000):
+            if not any(r.queue or r._has_active() for r in replicas):
+                break
+            horizon += quantum
+            for r in replicas:
+                r.run_until(horizon)
+            maybe_hedge(horizon)
+        else:
+            stuck = sorted(rid for rep in replicas for rid in rep._by_rid)
+            raise RuntimeError(f"staged drain did not converge; stuck request ids: {stuck}")
 
     fleet = [*replicas, *graveyard]
+    # first-completion-wins reconciliation: a hedged rid may have finished on
+    # two replicas — the earlier virtual completion is delivered (its result
+    # copied onto the caller's Request), the duplicate suppressed by rid.
+    for rid, clone in hedged.items():
+        orig = originals[rid]
+        cands = [r for r in (orig, clone) if r.t_finish is not None]
+        if not cands:
+            continue
+        win = min(cands, key=lambda r: r.t_finish)
+        if win is clone:
+            counters["hedges_won"] += 1
+            orig.output = list(clone.output or [])
+            orig.t_admit = clone.t_admit
+            orig.t_finish = clone.t_finish
+        else:
+            counters["hedges_lost"] += 1
     if obs is not None:
         obs.on_done(fleet)
-    done = [r for rep in fleet for r in rep.finished]
+    delivered: dict[int, Request] = {}
+    suppressed = 0
+    for rep in fleet:
+        for r in rep.finished:
+            if r.rid in delivered:
+                suppressed += 1
+                continue
+            delivered[r.rid] = originals.get(r.rid, r)
+    done = list(delivered.values())
+    duplicates = len(done) - len({r.rid for r in done})  # double-delivered rids: must be 0
     lat = np.array([r.latency for r in done], np.float64)
     total_tokens = sum(rep.tokens_done for rep in fleet)
     makespan = max((rep.clock for rep in fleet), default=0.0)
@@ -376,6 +609,9 @@ def run_router(
             for rep in fleet
         ],
         "completed": len(done),
+        "duplicates": duplicates,
+        "suppressed": suppressed,
+        **counters,
         "total_tokens": total_tokens,
         "makespan": round(makespan, 3),
         "throughput_tok_per_s": round(total_tokens / makespan, 3) if makespan > 0 else None,

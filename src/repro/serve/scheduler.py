@@ -50,10 +50,17 @@ class SchedulerConfig:
     continuous            False: static-batch baseline — admit only when the
                           engine is fully idle, then fill every slot (the old
                           serve driver's behavior, kept as the bench baseline).
+    preempt               graceful degradation (paged engines): under pool
+                          pressure, evict the active slot with the MOST
+                          remaining generation budget back to the page pool
+                          (pages are the checkpoint) so the blocked head can
+                          enter; the victim restores token-identically once
+                          pressure clears.
     """
 
     max_waiting_prefill: int = 2
     continuous: bool = True
+    preempt: bool = False
 
     def __post_init__(self) -> None:
         if self.max_waiting_prefill < 1:
@@ -67,6 +74,8 @@ class Scheduler:
     def __init__(self, config: SchedulerConfig | None = None, obs=None) -> None:
         self.config = config or SchedulerConfig()
         self.queue: collections.deque[Request] = collections.deque()
+        self.preempted: list[dict] = []  # evicted resume tokens, FIFO
+        self.counters = {"retries": 0, "hedges_won": 0, "hedges_lost": 0, "preemptions": 0, "evicted_restored": 0}
         self.obs = obs if obs is not None else NULL_SERVE_OBS
 
     def submit(self, req: Request) -> None:
@@ -81,6 +90,7 @@ class Scheduler:
             self.config.max_waiting_prefill,
             self.config.continuous,
             tuple((int(r.prompt.shape[0]), int(r.max_gen)) for r in self.queue),
+            tuple((int(s["pos"]), int(s["generated"]), int(s["max_gen"])) for s in self.preempted),
         )
 
     def admit(self, engine, now: float) -> list[tuple]:
@@ -98,6 +108,17 @@ class Scheduler:
         cap = cfg.max_waiting_prefill if cfg.continuous else engine.n_slots
         finished = []
         admits = 0
+        # preempted work re-enters first: it was admitted before anything
+        # still queued, so FIFO order is preserved across an eviction
+        while self.preempted and engine.free_slots and admits < cap:
+            state = self.preempted[0]
+            if not engine.can_restore(state):
+                break
+            self.preempted.pop(0)
+            slot = engine.restore(state)
+            self.counters["evicted_restored"] += 1
+            self.obs.on_restore(state["rid"], slot, now)
+            admits += 1
         while self.queue and engine.free_slots and admits < cap:
             req = self.queue[0]
             L, G = int(req.prompt.shape[0]), req.max_gen
@@ -107,6 +128,8 @@ class Scheduler:
                         f"request {req.rid} (prompt {L}, max_gen {G}) can never be "
                         "admitted by this engine"
                     )
+                if cfg.preempt and self._preempt_for(engine, G, now):
+                    continue  # pages freed — re-check the head this same call
                 self.obs.on_defer("pool", now)
                 break  # transient pressure (page pool) — retry next tick
             self.queue.popleft()
@@ -119,6 +142,26 @@ class Scheduler:
         if self.queue and engine.free_slots and admits >= cap:
             self.obs.on_defer("prefill_cap", now)
         return finished
+
+    def _preempt_for(self, engine, incoming_gen: int, now: float) -> bool:
+        """Evict the active slot with the most remaining generation budget IF
+        it strictly exceeds the incoming request's — interactive work preempts
+        batch work, never the reverse, and the strict inequality rules out
+        eviction cycles.  Returns True if a victim's pages were freed."""
+        victim, rem = None, incoming_gen
+        for b, st in enumerate(engine.slots):
+            if not st.active or not engine.can_preempt(b):
+                continue
+            r = st.max_gen - st.generated
+            if r > rem:
+                victim, rem = b, r
+        if victim is None:
+            return False
+        state = engine.preempt(victim)
+        self.preempted.append(state)
+        self.counters["preemptions"] += 1
+        self.obs.on_preempt(state["rid"], victim, now)
+        return True
 
 
 def serve_loop(
@@ -154,7 +197,7 @@ def serve_loop(
         r.t_finish = now
         obs.on_finish(r, now)
 
-    while pending or sched.queue or engine.has_active:
+    while pending or sched.queue or sched.preempted or engine.has_active:
         while pending and pending[0].arrival <= clock + 1e-9:
             sched.submit(pending.popleft())
         for rid, toks in sched.admit(engine, clock):
@@ -168,17 +211,21 @@ def serve_loop(
             obs.on_tick(clock, dt, engine, len(sched.queue))
         elif pending:
             clock = max(clock, pending[0].arrival)
-        elif sched.queue:  # idle engine + queued work: admit next loop pass
+        elif sched.queue or sched.preempted:  # idle engine + parked work: admit next loop pass
             continue
     wall_s = time.time() - t0
-    return summarize(requests, engine, clock, wall_s)
+    return summarize(requests, engine, clock, wall_s, counters=sched.counters)
 
 
-def summarize(requests: list[Request], engine, ticks_elapsed: float, wall_s: float) -> dict:
+def summarize(
+    requests: list[Request], engine, ticks_elapsed: float, wall_s: float, counters: dict | None = None
+) -> dict:
     lat = np.array([r.latency for r in requests if r.latency is not None], np.float64)
     wait = np.array([r.wait for r in requests if r.wait is not None], np.float64)
     gen_tokens = sum(len(r.output) for r in requests if r.output is not None)
     m = engine.metrics()
+    robust = {"retries": 0, "hedges_won": 0, "hedges_lost": 0, "preemptions": 0, "evicted_restored": 0}
+    robust.update(counters or {})
     return {
         "requests": len(requests),
         "completed": int((lat >= 0).sum()),
@@ -194,4 +241,5 @@ def summarize(requests: list[Request], engine, ticks_elapsed: float, wall_s: flo
         "slot_utilization": round(m["slot_utilization"], 3),
         "prefills": m["prefills"],
         "prefill_tokens": m["prefill_tokens"],
+        **robust,
     }

@@ -3,6 +3,7 @@
 from repro.traces.faults import (
     FaultEvent,
     FaultInjector,
+    FaultyReplicaClock,
     FaultyTimingSource,
     faults_spec,
     parse_faults,
@@ -34,6 +35,7 @@ __all__ = [
     "to_events",
     "FaultEvent",
     "FaultInjector",
+    "FaultyReplicaClock",
     "FaultyTimingSource",
     "parse_faults",
     "faults_spec",
@@ -42,6 +44,10 @@ __all__ = [
     "run_campaign",
     "run_trial",
     "scenario_faults",
+    "ServeCampaignConfig",
+    "run_serve_campaign",
+    "run_serve_trial",
+    "serve_scenario_faults",
     "TraceSynthConfig",
     "synthesize_trace",
 ]
@@ -55,6 +61,15 @@ def __getattr__(name):
         from repro.traces import campaign
 
         return getattr(campaign, name)
+    if name in (
+        "ServeCampaignConfig",
+        "run_serve_campaign",
+        "run_serve_trial",
+        "serve_scenario_faults",
+    ):
+        from repro.traces import serve_campaign
+
+        return getattr(serve_campaign, name)
     if name in ("TraceSynthConfig", "synthesize_trace"):
         from repro.traces import synth
 

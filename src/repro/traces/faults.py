@@ -50,6 +50,7 @@ __all__ = [
     "sample_faults",
     "FaultInjector",
     "FaultyTimingSource",
+    "FaultyReplicaClock",
 ]
 
 MEMBERSHIP_KINDS = ("fail", "add", "replace", "outage")
@@ -223,9 +224,20 @@ def sample_faults(
     fault_steps = sorted(int(s) for s in rng.choice(np.arange(lo, hi), size=n_faults, replace=False))
     min_fleet = n_workers  # worst-case membership size as faults apply
     events: list[FaultEvent] = []
+    def shrink_safe(kind: str, fleet: int) -> bool:
+        """Is ``kind`` legal for the CURRENT worst-case fleet size?  The
+        shrinking kinds (``fail`` removes one worker, ``outage`` up to two)
+        are offered only while a removal still leaves >= 2 workers."""
+        return kind not in ("fail", "outage") or fleet > 2
+
     for step in fault_steps:
         remaining = max((steps - step) // 2, 2)
-        options = [k for k in kinds if k != "fail" and k != "outage" or min_fleet > 2]
+        options = [k for k in kinds if shrink_safe(k, min_fleet)]
+        if not options:
+            raise ValueError(
+                f"no legal fault kinds for a fleet of {min_fleet}: {list(kinds)} "
+                "are all shrinking kinds — include slow/netdeg/add"
+            )
         kind = str(rng.choice(options))
         if kind == "slow":
             events.append(
@@ -409,3 +421,31 @@ class FaultyTimingSource:
     @property
     def ready(self) -> bool:
         return self.inner.ready
+
+
+class FaultyReplicaClock:
+    """Routes the injector's windowed timing faults onto a replica fleet's
+    virtual clocks — the serving mirror of :class:`FaultyTimingSource`.
+
+    Training scales the per-worker epoch times the controller measures;
+    serving scales each replica's per-tick virtual cost: before every
+    advance the router driver calls :meth:`apply`, which sets
+    ``replica.tick_scale`` to the product of the replica's live ``slow``
+    windows and the fleet-wide ``netdeg`` windows at the current fault step
+    (= assignment index).  The scaled clock then flows through
+    ``harvest_window`` into the adaptive controller exactly like real
+    slowness — same measurement path, same reaction.
+    """
+
+    def __init__(self, injector: FaultInjector, step_of: Callable[[], int]) -> None:
+        self.injector = injector
+        self._step_of = step_of
+
+    def scales(self, n: int) -> np.ndarray:
+        """Per-replica tick-cost multiplier at the current fault step."""
+        step = self._step_of()
+        return self.injector.compute_scale(step, n) * self.injector.collective_scale(step)
+
+    def apply(self, replicas: Sequence) -> None:
+        for rep, s in zip(replicas, self.scales(len(replicas))):
+            rep.tick_scale = float(s)

@@ -5,6 +5,7 @@ import pytest
 
 from repro.analysis.protocol import (
     ElasticModel,
+    ServeFaultModel,
     ServeModel,
     explore,
     format_script,
@@ -254,6 +255,89 @@ def test_serve_eos_retires_early_and_frees_pages():
 
 
 # ---------------------------------------------------------------------------
+# serve fault-tolerance harness (replica death / retry / hedge / preempt)
+# ---------------------------------------------------------------------------
+
+
+def test_serve_faults_clean_model_exhausts_with_zero_violations():
+    """Exhaustive verification over {submit, retry, admit, tick, replica_die,
+    hedge, preempt, restore}: no request lost, none delivered twice,
+    preempted state restores exactly, pools stay leak-free per replica."""
+    res = explore(ServeFaultModel(), max_depth=12)
+    assert res.exhausted and not res.violations
+    assert res.n_states > 1000
+
+
+def test_serve_faults_full_graph_closes():
+    # the entire reachable graph (not just a depth slice) is clean: BFS
+    # saturates before the ceiling, so the verification is truly exhaustive
+    res = explore(ServeFaultModel(), max_depth=40)
+    assert res.exhausted and not res.violations
+    assert res.max_depth_reached < 40
+
+
+def test_serve_faults_double_deliver_caught_and_replayable():
+    make = lambda: ServeFaultModel(buggy="double-deliver")  # noqa: E731
+    res = explore(make(), max_depth=6, max_violations=1)
+    assert res.violations
+    v = res.violations[0]
+    assert v.kind == "invariant" and "completed twice" in v.message
+    rv = replay(make(), parse_script(format_script(v.script)))
+    assert rv is not None and rv.kind == v.kind
+    # the same script on the CORRECT model is clean: suppression fixes it
+    assert replay(ServeFaultModel(), parse_script(format_script(v.script))) is None
+
+
+def test_serve_faults_replica_die_orphans_rejoin_pool():
+    m = ServeFaultModel()
+    s = m.initial()
+    for a in ["submit:1x3", "retry:0", "admit:0"]:
+        s = m.apply(s, a)
+    assert s.engines[0].has_active and not s.pending
+    s = m.apply(s, "replica_die:0")
+    # the in-flight request is orphaned back to the router pool, the dead
+    # engine is reset (pool audited + rebuilt), and the rid is re-dispatchable
+    assert not s.alive[0] and not s.engines[0].has_active
+    assert s.pending == [0]
+    assert "retry:1" in m.actions(s)
+    assert "replica_die:1" not in m.actions(s)  # never kill the last replica
+    s = m.apply(s, "retry:1")
+    s = m.apply(s, "admit:1")
+    while s.engines[1].has_active:
+        s = m.apply(s, "tick:1")
+    assert s.delivered == {0: 1}
+    assert not m.invariants(s)
+
+
+def test_serve_faults_preempt_restore_roundtrip_is_exact():
+    m = ServeFaultModel()
+    s = m.initial()
+    for a in ["submit:1x3", "retry:0", "admit:0", "tick:0", "preempt:0"]:
+        s = m.apply(s, a)
+    assert s.stash[0] and not s.engines[0].has_active
+    assert s.engines[0].pool.free_pages == m.layout.n_pages  # pages released
+    saved = dict(s.stash[0][0])
+    s = m.apply(s, "restore:0")
+    assert s.restored_log == [
+        (
+            (saved["pos"], saved["generated"], saved["max_gen"]),
+            (saved["pos"], saved["generated"], saved["max_gen"]),
+        )
+    ]
+    assert not m.invariants(s)
+
+
+def test_serve_faults_apply_does_not_mutate_input_state():
+    m = ServeFaultModel()
+    s0 = m.initial()
+    s1 = m.apply(s0, "submit:1x3")
+    fp1 = m.fingerprint(s1)
+    for a in m.actions(s1):
+        m.apply(s1, a)
+    assert m.fingerprint(s1) == fp1 and m.fingerprint(s0) != fp1
+
+
+# ---------------------------------------------------------------------------
 # CLI integration
 # ---------------------------------------------------------------------------
 
@@ -271,13 +355,15 @@ def test_cli_protocol_target_deterministic(tmp_path):
     assert out1.read_bytes() == out2.read_bytes()
     rep = json.loads(out1.read_text())
     assert rep["summary"]["n_error"] == 0
-    for name in ("elastic", "serve"):
+    for name in ("elastic", "serve", "serve-faults"):
         assert rep["targets"]["protocol"][name]["exhausted"] is True
         assert rep["targets"]["protocol"][name]["n_violations"] == 0
     st = rep["targets"]["selftest_protocol"]
     assert st["elastic-remap-identity"]["replayed"] is True
     assert st["serve-drop-release"]["replayed"] is True
     assert st["serve-drop-release"]["counterexample"]
+    assert st["serve-faults-double-deliver"]["replayed"] is True
+    assert st["serve-faults-double-deliver"]["counterexample"]
 
 
 def test_cli_cex_out_writes_selftest_scripts(tmp_path):

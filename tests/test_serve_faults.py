@@ -1,0 +1,391 @@
+"""Fault-tolerant serving: replica outages, retry/hedging with exactly-once
+delivery, and paged preemption.
+
+The load-bearing equivalences:
+  * a killed replica's requests re-dispatch and complete TOKEN-IDENTICAL to
+    the fault-free run (the prompt is the checkpoint — deterministic
+    re-prefill reproduces the generation exactly);
+  * hedged duplicates are suppressed by request id — first completion wins,
+    ``duplicates`` is always 0;
+  * a preempted slot's pages release back to the pool and the restored
+    request continues bit-exactly where it left off.
+"""
+
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import init_params
+from repro.serve import (
+    EngineReplica,
+    ModelReplica,
+    Request,
+    RouterConfig,
+    SchedulerConfig,
+    ServeEngine,
+    TrafficRouter,
+    WorkloadConfig,
+    run_router,
+    serve_loop,
+    synthesize,
+)
+from repro.serve.scheduler import summarize
+from repro.traces.faults import FaultEvent, FaultInjector, FaultyReplicaClock, sample_faults
+
+
+@pytest.fixture(scope="module")
+def smol():
+    """Shared fp32 smoke model for the real-engine tests (jit amortized)."""
+    cfg = smoke_config("smollm-360m", seq=48)
+    cfg = dataclasses.replace(cfg, param_dtype="float32", compute_dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# fault sampling + replica clock (tentpole 1 / satellite: kind filter)
+# ---------------------------------------------------------------------------
+
+
+def test_sample_faults_fleet_never_drops_below_two():
+    """Regression for the kind filter: across many seeds the worst-case
+    membership (no rejoin credit for healing outages) never drops below 2,
+    for every starting fleet size — including fleets already AT 2, where
+    shrinking kinds must never be drawn at all."""
+    for n_workers in (2, 3, 4):
+        for seed in range(60):
+            events = sample_faults(n_workers, steps=32, seed=seed)
+            fleet = n_workers
+            for ev in sorted(events, key=lambda e: e.step):
+                if ev.kind == "fail":
+                    fleet -= 1
+                elif ev.kind == "outage":
+                    fleet -= len(ev.workers)
+                elif ev.kind == "add":
+                    fleet += 1
+                assert fleet >= 2, (n_workers, seed, ev.spec(), fleet)
+
+
+def test_sample_faults_all_shrinking_kinds_on_minimal_fleet_raises():
+    with pytest.raises(ValueError, match="no legal fault kinds"):
+        sample_faults(2, steps=32, seed=0, kinds=("fail", "outage"))
+
+
+def test_faulty_replica_clock_scales_and_applies():
+    inj = FaultInjector(3)
+    inj.apply(FaultEvent(step=4, kind="slow", index=1, factor=3.0, duration=4))
+    inj.apply(FaultEvent(step=6, kind="netdeg", factor=2.0, duration=2))
+    step = [0]
+    clock = FaultyReplicaClock(inj, lambda: step[0])
+    step[0] = 2  # before every window
+    assert np.allclose(clock.scales(3), [1.0, 1.0, 1.0])
+    step[0] = 5  # slow window only: replica 1 is 3x
+    assert np.allclose(clock.scales(3), [1.0, 3.0, 1.0])
+    step[0] = 7  # slow + netdeg: the degradation multiplies EVERY replica
+    assert np.allclose(clock.scales(3), [2.0, 6.0, 2.0])
+    reps = [ModelReplica(f"r{i}") for i in range(3)]
+    clock.apply(reps)
+    assert [r.tick_scale for r in reps] == [2.0, 6.0, 2.0]
+    step[0] = 9  # both windows closed
+    clock.apply(reps)
+    assert [r.tick_scale for r in reps] == [1.0, 1.0, 1.0]
+
+
+def test_tick_scale_stretches_virtual_time():
+    outs = {}
+    for scale in (1.0, 2.0):
+        rep = ModelReplica("r", speed=1.0)
+        rep.tick_scale = scale
+        rep.submit(Request(rid=0, prompt=np.zeros(4, np.int32), max_gen=8))
+        rep.drain()
+        outs[scale] = rep.clock
+    assert outs[2.0] == pytest.approx(2.0 * outs[1.0])
+
+
+# ---------------------------------------------------------------------------
+# replica lifecycle: bounded drain, take_queue, kill
+# ---------------------------------------------------------------------------
+
+
+class _StuckReplica(ModelReplica):
+    """A replica whose active slots never retire — the hang a fault can
+    produce, which ``drain`` must bound instead of spinning forever."""
+
+    def _tick(self):
+        return 0, []
+
+
+def test_drain_bound_raises_with_stuck_rids():
+    rep = _StuckReplica("wedged")
+    rep.submit(Request(rid=7, prompt=np.zeros(4, np.int32), max_gen=8))
+    rep.submit(Request(rid=9, prompt=np.zeros(4, np.int32), max_gen=8))
+    with pytest.raises(RuntimeError, match=r"wedged.*\[7, 9\]"):
+        rep.drain(max_ticks=50)
+
+
+def test_take_queue_returns_only_unadmitted():
+    rep = ModelReplica("r", n_slots=1)
+    a = Request(rid=0, prompt=np.zeros(4, np.int32), max_gen=8)
+    b = Request(rid=1, prompt=np.zeros(4, np.int32), max_gen=8)
+    rep.submit(a)
+    rep.submit(b)
+    rep._step()  # admits a (1 slot), b stays queued
+    taken = rep.take_queue()
+    assert taken == [b] and not rep.queue
+    rep.drain()
+    assert a.output is not None and b.output is None
+
+
+def test_kill_orphans_reset_to_preadmission_state():
+    rep = ModelReplica("r", n_slots=1)
+    a = Request(rid=0, prompt=np.zeros(4, np.int32), max_gen=8)
+    b = Request(rid=1, prompt=np.zeros(4, np.int32), max_gen=8)
+    rep.submit(a)
+    rep.submit(b)
+    rep._step()
+    orphans = rep.kill()
+    assert {r.rid for r in orphans} == {0, 1}
+    for r in orphans:
+        assert r.t_admit is None and r.t_finish is None and r.output is None
+    assert not rep.queue and not rep._has_active() and not rep._by_rid
+
+
+# ---------------------------------------------------------------------------
+# router robustness (satellite: observe(None) + shrink-after-window)
+# ---------------------------------------------------------------------------
+
+
+def test_observe_none_speeds_keeps_shares_then_reuses_last_known():
+    r = TrafficRouter(2, RouterConfig(policy="adaptive"))
+    before = r.shares.copy()
+    r.observe([None, None])  # no measurement at all: shares must not move
+    assert np.array_equal(r.shares, before)
+    r.observe([4.0, 2.0])
+    fast_biased = r.shares.copy()
+    assert fast_biased[0] > fast_biased[1]
+    r.observe([None, 2.0])  # idle replica 0 reuses its last known speed
+    assert r.shares[0] > r.shares[1]
+    assert len(r.shares_history) == 3  # initial + two applied observations
+
+
+def test_resize_shrink_right_after_observation_window():
+    r = TrafficRouter(3, RouterConfig(policy="adaptive"))
+    r.observe([4.0, 2.0, 1.0])
+    r.resize(2, carry_tok_per_s=[4.0, 2.0])
+    assert len(r.shares) == 2 and np.isclose(r.shares.sum(), 1.0)
+    assert r.shares[0] > r.shares[1]  # carried speeds warm-start the split
+    # the very next window after the shrink must be consumable as-is
+    r.observe([4.0, None])
+    assert len(r.shares) == 2
+    for _ in range(10):
+        assert r.route() in (0, 1)
+
+
+def test_summarize_always_reports_robustness_counters():
+    class _EngineStub:
+        def metrics(self):
+            return {"ticks": 0, "slot_utilization": 0.0, "prefills": 0, "prefill_tokens": 0}
+
+    s = summarize([], _EngineStub(), 0.0, 0.0)
+    for k in ("retries", "hedges_won", "hedges_lost", "preemptions", "evicted_restored"):
+        assert s[k] == 0
+    s = summarize([], _EngineStub(), 0.0, 0.0, counters={"retries": 3, "preemptions": 1})
+    assert s["retries"] == 3 and s["preemptions"] == 1 and s["hedges_won"] == 0
+
+
+# ---------------------------------------------------------------------------
+# routed fault tolerance (modeled replicas: traffic dynamics only)
+# ---------------------------------------------------------------------------
+
+
+def _workload(n=24, seed=0, rate=1.5):
+    rng = np.random.default_rng(seed)
+    arr = np.cumsum(rng.exponential(1.0 / rate, n))
+    return [
+        Request(rid=i, prompt=np.zeros(int(rng.integers(4, 10)), np.int32),
+                max_gen=int(rng.integers(6, 16)), arrival=float(arr[i]))
+        for i in range(n)
+    ]
+
+
+def test_outage_redispatches_and_rejoins():
+    make = lambda name, speed: ModelReplica(name, speed=speed, n_slots=2)  # noqa: E731
+    reps = [make(f"r{i}", 1.0) for i in range(3)]
+    out = run_router(reps, _workload(), make_replica=make, faults="outage@8:1~6")
+    assert out["completed"] == 24 and out["duplicates"] == 0
+    assert out["replica_deaths"] == 1 and out["retries"] >= 1
+    names = [r["name"] for r in out["replicas"]]
+    assert "r1'" in names  # the outage healed: its member rejoined
+
+
+def test_fail_without_survivors_raises():
+    reps = [ModelReplica("only")]
+    with pytest.raises(ValueError, match="entire fleet"):
+        run_router(reps, _workload(n=4), faults="fail@0:0")
+
+
+def test_hedging_suppresses_duplicates_first_completion_wins():
+    reps = [ModelReplica(f"r{i}", speed=1.0, n_slots=2) for i in range(2)]
+    out = run_router(
+        reps, _workload(), faults="slow@2:0*40~90", hedge_timeout=6.0
+    )
+    assert out["completed"] == 24
+    assert out["duplicates"] == 0
+    assert out["hedges"] >= 1 and out["hedges_won"] >= 1
+    assert out["hedges_won"] + out["hedges_lost"] <= out["hedges"]
+    assert out["suppressed"] >= out["hedges_won"]  # every won hedge had a loser copy
+
+
+def test_remove_event_redistributes_backlog():
+    make = lambda name, speed: ModelReplica(name, speed=speed, n_slots=1)  # noqa: E731
+    reps = [make(f"r{i}", 1.0) for i in range(3)]
+    out = run_router(
+        reps, _workload(), make_replica=make,
+        events=[{"at": 6, "kind": "remove", "index": 2}],
+    )
+    assert out["completed"] == 24 and out["duplicates"] == 0
+    assert out["redistributed"] >= 0 and out["retries"] == 0  # graceful, not a crash
+
+
+# ---------------------------------------------------------------------------
+# real-engine fault tolerance (token identity across kill/re-dispatch)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_replica_death_completes_token_identical_to_fault_free(smol):
+    """THE acceptance property: kill a real-engine replica mid-flight; every
+    request still completes, exactly once, with output token-identical to
+    the fault-free run — deterministic re-prefill from the prompt is a full
+    checkpoint."""
+    cfg, params = smol
+    wl = WorkloadConfig(n_requests=8, rate=2.0, prompt_len=(4, 10), gen_len=(6, 12),
+                        vocab_size=cfg.vocab_size, seed=3)
+
+    def fleet():
+        return [
+            EngineReplica(f"e{i}", ServeEngine(cfg, params, n_slots=2, max_seq=48, seed=0))
+            for i in range(2)
+        ]
+
+    base_reqs = synthesize(wl)
+    base = run_router(fleet(), base_reqs)
+    assert base["completed"] == 8
+    want = {r.rid: r.output for r in base_reqs}
+
+    reqs = synthesize(wl)
+    out = run_router(fleet(), reqs, faults="fail@3:1")
+    assert out["completed"] == 8 and out["duplicates"] == 0
+    assert out["replica_deaths"] == 1 and out["retries"] >= 1
+    assert {r.rid: r.output for r in reqs} == want
+
+
+# ---------------------------------------------------------------------------
+# paged preemption (tentpole 3)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_engine_preempt_restore_is_token_identical(smol):
+    cfg, params = smol
+    eng = ServeEngine(cfg, params, n_slots=2, max_seq=32, seed=0,
+                      attn_impl="paged", page_size=4)
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+    other = rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+    G = 12
+
+    def run_to_completion(rid):
+        while eng.has_active:
+            for fid, toks in eng.tick():
+                if fid == rid:
+                    return toks
+        raise AssertionError("request never finished")
+
+    # reference: uninterrupted generation
+    slot, _ = eng.admit(0, prompt, G)
+    want = run_to_completion(0)
+
+    # preempt mid-generation, let an interloper dirty the slot, restore
+    eng.reset()
+    slot, _ = eng.admit(1, prompt, G)
+    for _ in range(4):
+        eng.tick()
+    assert eng.can_preempt(slot)
+    state = eng.preempt(slot)
+    assert not eng.has_active
+    assert state["rid"] == 1 and state["generated"] == 5
+    islot, _ = eng.admit(2, other, 4)
+    run_to_completion(2)
+    assert eng.can_restore(state)
+    assert state["out"] == want[:5]  # the prefix already generated is on the checkpoint
+    eng.restore(state)
+    got = run_to_completion(1)  # the finish payload carries the FULL output
+    assert got == want
+    assert eng.preemptions == 1 and eng.restores == 1
+    eng.reset()  # leak audit on exit
+
+
+@pytest.mark.slow
+def test_serve_loop_preemption_relieves_pool_pressure_token_identical(smol):
+    """A batch hog is evicted for interactive arrivals under pool pressure
+    and restored token-identically; without preemption the interactives
+    head-of-line block behind the hog."""
+    cfg, params = smol
+    eng = ServeEngine(cfg, params, n_slots=3, max_seq=48, seed=0,
+                      attn_impl="paged", page_size=4, pool_pages=9)
+    rng = np.random.default_rng(11)
+    hog_prompt = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+    inter_prompts = [rng.integers(0, cfg.vocab_size, 4).astype(np.int32) for _ in range(3)]
+
+    def reqs():
+        return [
+            Request(rid=0, prompt=hog_prompt, max_gen=24),
+            *[Request(rid=i + 1, prompt=p, max_gen=4, arrival=float(2 + i))
+              for i, p in enumerate(inter_prompts)],
+        ]
+
+    runs, outs, waits = {}, {}, {}
+    for mode, preempt in (("preempt", True), ("fifo", False)):
+        eng.reset()
+        rs = reqs()
+        runs[mode] = serve_loop(eng, rs, SchedulerConfig(max_waiting_prefill=2, preempt=preempt))
+        outs[mode] = {r.rid: r.output for r in rs}
+        waits[mode] = max(r.wait for r in rs if r.rid != 0)
+    assert runs["preempt"]["completed"] == 4 == runs["fifo"]["completed"]
+    assert runs["preempt"]["preemptions"] >= 1
+    assert runs["preempt"]["evicted_restored"] == runs["preempt"]["preemptions"]
+    assert runs["fifo"]["preemptions"] == 0
+    assert outs["preempt"] == outs["fifo"]  # preemption is invisible in tokens
+    assert waits["preempt"] < waits["fifo"]  # ...but not in interactive latency
+
+
+# ---------------------------------------------------------------------------
+# campaign (seeded, deterministic)
+# ---------------------------------------------------------------------------
+
+
+def test_serve_campaign_routed_trials_deterministic_and_exactly_once():
+    from repro.traces.serve_campaign import ServeCampaignConfig, run_serve_campaign
+
+    cfg = ServeCampaignConfig(scenarios=("replica-outage", "slow-replica"), seeds=(0,))
+    a = run_serve_campaign(cfg)
+    b = run_serve_campaign(cfg)
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+    s = a["summary"]
+    assert s["total_duplicates"] == 0 and s["all_completed"]
+    assert s["total_retries"] >= 1 and s["total_hedges"] >= 1
+    assert s["max_p99_ttft_inflation"] <= cfg.ttft_inflation_max
+    for t in a["trials"]:
+        assert t["completed"] == t["requests"]
+
+
+def test_serve_campaign_rejects_unknown_scenario():
+    from repro.traces.serve_campaign import ServeCampaignConfig
+
+    with pytest.raises(ValueError, match="unknown scenarios"):
+        ServeCampaignConfig(scenarios=("chaos-monkey",))
