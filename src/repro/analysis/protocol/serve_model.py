@@ -347,7 +347,10 @@ class ServeFaultModel:
 
     Actions: ``submit`` (a request enters the router pool), ``retry:R``
     (the pool head is (re)dispatched onto replica R — initial routing and
-    post-death retry are the same protocol step), ``admit:R`` / ``tick:R``
+    post-death retry are the same protocol step; mirroring the router, the
+    copy is DROPPED instead when the rid is already in flight on a live
+    replica, so two copies of one rid never co-locate), ``admit:R`` /
+    ``tick:R``
     (replica R makes progress), ``replica_die:R`` (R is killed mid-flight:
     its queued, in-flight, AND preempted requests are orphaned back to the
     pool; the engine resets like ``EngineReplica.kill``), ``hedge:R`` (the
@@ -472,7 +475,22 @@ class ServeFaultModel:
         i = int(spec)
         eng = s.engines[i]
         if kind == "retry":
-            s.queues[i].append(s.pending.pop(0))
+            rid = s.pending.pop(0)
+            held = any(
+                rid in s.queues[j]
+                or any(st.rid == rid for st in s.engines[j].slots.values())
+                or any(t["rid"] == rid for t in s.stash[j])
+                for j in range(self.n_replicas)
+                if s.alive[j]
+            )
+            # router drop rule: if another copy of this rid (a hedge clone,
+            # or the original when the clone's replica died) is still in
+            # flight on a live replica, the orphan is dropped instead of
+            # re-dispatched — re-dispatch could co-locate two copies of one
+            # rid on one replica, which rid-keyed slot bookkeeping cannot
+            # represent.  Not a loss: the surviving copy delivers.
+            if not held:
+                s.queues[i].append(rid)
         elif kind == "admit":
             rid = s.queues[i].pop(0)
             L, G = s.shape_of[rid]

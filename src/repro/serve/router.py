@@ -431,6 +431,16 @@ def run_router(
 
     def redistribute(orphans: list[Request], retry: bool) -> None:
         for r in sorted(orphans, key=lambda q: q.rid):
+            if any(r.rid in rep._by_rid for rep in replicas):
+                # another copy of this rid (its hedge clone, or the original
+                # when the clone's replica died) is still in flight on a
+                # survivor.  Re-dispatching would co-locate two copies of one
+                # rid on one replica — submit/_by_rid are keyed by rid, so
+                # the second completion would be lost or double-delivered.
+                # Drop the orphan: the surviving copy delivers, and first-
+                # completion-wins reconciliation puts its result on the
+                # caller's Request.
+                continue
             counters["retries" if retry else "redistributed"] += 1
             tgt = replicas[router.route()]
             tgt.submit(r)
@@ -457,7 +467,11 @@ def run_router(
         carried, _ = _carried_speeds(replicas)
         router.resize(len(replicas), carried)
         if rejoin and ev.duration is not None:
-            rejoins.append({"at": ev.step + ev.duration, "members": members})
+            # clamp to the schedule end: the step counter tops out at
+            # len(requests) before the drain tail, so an outage outliving
+            # the request schedule must still heal there — unclamped it
+            # would never rejoin and the fleet would stay silently shrunk
+            rejoins.append({"at": min(ev.step + ev.duration, len(requests)), "members": members})
         redistribute(orphans, retry=True)
 
     def join_member(name: str, speed: float, clock: float = 0.0) -> None:
@@ -501,9 +515,16 @@ def run_router(
             src = next((rep for rep in replicas if rid in rep._by_rid), None)
             if src is None:
                 continue
+            # the clone must land on a replica NOT already holding this rid
+            # (co-locating two copies of one rid on a replica corrupts its
+            # rid-keyed slot bookkeeping) — round-robin past any holder
             j = router.route()
-            if replicas[j] is src:
+            for _ in range(len(replicas)):
+                if rid not in replicas[j]._by_rid:
+                    break
                 j = (j + 1) % len(replicas)
+            else:
+                continue  # every replica holds a copy: nothing to hedge onto
             clone = Request(rid=rid, prompt=orig.prompt, max_gen=orig.max_gen, arrival=now)
             hedged[rid] = clone
             counters["hedges"] += 1
@@ -582,15 +603,19 @@ def run_router(
     if obs is not None:
         obs.on_done(fleet)
     delivered: dict[int, Request] = {}
-    suppressed = 0
+    completions: dict[int, int] = {}
     for rep in fleet:
         for r in rep.finished:
-            if r.rid in delivered:
-                suppressed += 1
-                continue
-            delivered[r.rid] = originals.get(r.rid, r)
+            completions[r.rid] = completions.get(r.rid, 0) + 1
+            if r.rid not in delivered:
+                delivered[r.rid] = originals.get(r.rid, r)
     done = list(delivered.values())
-    duplicates = len(done) - len({r.rid for r in done})  # double-delivered rids: must be 0
+    suppressed = sum(c - 1 for c in completions.values())
+    # exactly-once audit: a hedged rid may legitimately complete twice (the
+    # loser was suppressed above); any completion beyond that — or a repeat
+    # of a never-hedged rid — is a delivery-protocol violation, counted here
+    # so the CI duplicates==0 gate can actually catch a regression
+    duplicates = sum(max(0, c - (2 if rid in hedged else 1)) for rid, c in completions.items())
     lat = np.array([r.latency for r in done], np.float64)
     total_tokens = sum(rep.tokens_done for rep in fleet)
     makespan = max((rep.clock for rep in fleet), default=0.0)

@@ -108,8 +108,12 @@ class Scheduler:
         cap = cfg.max_waiting_prefill if cfg.continuous else engine.n_slots
         finished = []
         admits = 0
-        # preempted work re-enters first: it was admitted before anything
-        # still queued, so FIFO order is preserved across an eviction
+        # preempted work gets first claim on free slots — best-effort, not a
+        # barrier: if the pool cannot cover the restore yet, younger queued
+        # requests may still admit below.  That is the point of preemption
+        # (interactive arrivals run ahead of the evicted batch hog); the
+        # victim's re-entry is a bounded latency penalty, never a loss — the
+        # serve loop cannot finish while ``preempted`` is non-empty.
         while self.preempted and engine.free_slots and admits < cap:
             state = self.preempted[0]
             if not engine.can_restore(state):

@@ -7,7 +7,9 @@ reruns and CI gates on it):
 
 * ``replica-outage`` — a replica is killed mid-run through the PR-6 fault
   grammar (``outage@k:i~d``) and later rejoins; its in-flight and queued
-  requests are re-dispatched to survivors (the prompt is the checkpoint).
+  requests are re-dispatched to survivors (the prompt is the checkpoint),
+  with hedging armed so the outage+hedge interaction (orphaned copies of
+  hedged rids are dropped, never co-located) is exercised under CI.
   Scored on completion (every request must finish exactly once), retries,
   recovery ticks (virtual time from fault onset until the last retried
   request completes), goodput retention, and p99-TTFT inflation vs the
@@ -159,9 +161,12 @@ def _routed_trial(cfg: ServeCampaignConfig, scenario: str, seed: int) -> dict:
 
     probe = _TrialProbe()
     reqs = _synth(cfg, seed)
-    hedge = cfg.hedge_timeout if scenario == "slow-replica" else None
+    # hedging is armed for EVERY routed scenario: outage + hedging is the
+    # protocol's hardest combination (an orphaned copy of an already-hedged
+    # rid must be dropped, not re-dispatched), so CI must exercise it
     run = run_router(
-        _fleet(cfg), reqs, rcfg, make_replica=make, obs=probe, faults=faults, hedge_timeout=hedge
+        _fleet(cfg), reqs, rcfg, make_replica=make, obs=probe, faults=faults,
+        hedge_timeout=cfg.hedge_timeout,
     )
 
     onset_idx = min(cfg.n_requests // 3, cfg.n_requests - 1)

@@ -240,6 +240,99 @@ def test_hedging_suppresses_duplicates_first_completion_wins():
     assert out["suppressed"] >= out["hedges_won"]  # every won hedge had a loser copy
 
 
+class _SlotListReplica(ModelReplica):
+    """ModelReplica with list-backed slots (like a real engine): two copies
+    of one rid would occupy two slots and BOTH retire — surfacing the
+    double-complete / lost-completion bug if the router ever co-locates a
+    rid (e.g. re-dispatching an orphan onto the replica holding its hedge
+    clone)."""
+
+    def __init__(self, name, speed=1.0, n_slots=2, prefill_cost_per_token=0.05):
+        super().__init__(name, speed, n_slots, prefill_cost_per_token)
+        self._slots: list[list[int]] = []  # [rid, remaining, total]
+
+    def _has_active(self):
+        return bool(self._slots)
+
+    def _can_admit(self):
+        return len(self._slots) < self.n_slots
+
+    def _admit(self, req):
+        if req.max_gen <= 1:
+            self.tokens_done += 1
+            return [(req.rid, 1)]
+        self._slots.append([req.rid, req.max_gen - 1, req.max_gen])
+        self.tokens_done += 1
+        return []
+
+    def _tick(self):
+        made = len(self._slots)
+        fins = []
+        for s in list(self._slots):
+            s[1] -= 1
+            if s[1] <= 0:
+                self._slots.remove(s)
+                fins.append((s[0], s[2]))
+        return made, fins
+
+    def _abort_active(self):
+        self._slots.clear()
+
+
+def test_kill_with_hedge_in_flight_never_colocates_rid_copies():
+    """THE outage+hedging interaction: a slow replica's stalled dispatches
+    are hedged onto the survivor, then the slow replica dies — its orphans
+    (the originals of already-hedged rids) must be DROPPED, not re-dispatched
+    onto the survivor that already holds their clones.  With list-backed
+    slots a co-location double-completes the rid (KeyError / duplicate
+    delivery); exactly-once must hold instead."""
+    reps = [_SlotListReplica(f"r{i}", speed=1.0, n_slots=2) for i in range(2)]
+    out = run_router(
+        reps, _workload(), faults="slow@2:0*40~90,fail@12:0",
+        make_replica=lambda name, speed: _SlotListReplica(name, speed=speed, n_slots=2),
+        hedge_timeout=4.0,
+    )
+    assert out["completed"] == 24 and out["duplicates"] == 0
+    assert out["hedges"] >= 1 and out["replica_deaths"] == 1
+
+
+def test_outage_with_hedging_exactly_once():
+    make = lambda name, speed: _SlotListReplica(name, speed=speed, n_slots=2)  # noqa: E731
+    reps = [make(f"r{i}", 1.0) for i in range(3)]
+    out = run_router(
+        reps, _workload(), make_replica=make, faults="outage@8:1~6", hedge_timeout=4.0
+    )
+    assert out["completed"] == 24 and out["duplicates"] == 0
+    assert out["replica_deaths"] == 1 and out["retries"] >= 1
+
+
+def test_duplicates_metric_detects_double_delivery():
+    """Regression for the audit itself: ``duplicates`` must count repeat
+    completions of non-hedged rids (a seeded double-delivery bug), not be 0
+    by construction of the delivered dict."""
+
+    class _DoubleDeliverReplica(ModelReplica):
+        def _complete(self, rid, n):
+            super()._complete(rid, n)
+            self.finished.append(self.finished[-1])  # deliver every rid twice
+
+    reps = [_DoubleDeliverReplica("evil"), ModelReplica("ok")]
+    out = run_router(reps, _workload(n=6))
+    assert out["duplicates"] >= 1
+
+
+def test_outage_outliving_schedule_still_rejoins_before_drain():
+    """A bounded outage whose step+duration exceeds the request count must
+    still heal (clamped to the schedule end), not leave the fleet silently
+    shrunk for the drain tail."""
+    make = lambda name, speed: ModelReplica(name, speed=speed, n_slots=2)  # noqa: E731
+    reps = [make(f"r{i}", 1.0) for i in range(3)]
+    out = run_router(reps, _workload(), make_replica=make, faults="outage@20:1~999")
+    assert out["completed"] == 24 and out["duplicates"] == 0
+    rejoined = [r for r in out["replicas"] if r["name"] == "r1'"]
+    assert rejoined and not rejoined[0]["retired"]
+
+
 def test_remove_event_redistributes_backlog():
     make = lambda name, speed: ModelReplica(name, speed=speed, n_slots=1)  # noqa: E731
     reps = [make(f"r{i}", 1.0) for i in range(3)]
